@@ -1,0 +1,77 @@
+"""Roofline table from the dry-run JSON (§Roofline deliverable).
+
+Prints the full per-cell table (three terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs useful ratio, roofline fraction) and emits the
+markdown table EXPERIMENTS.md embeds.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+DEFAULT = os.path.join(os.path.dirname(__file__), "dryrun_results.json")
+
+
+def load(path: str = DEFAULT) -> List[Dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows(path: str = DEFAULT, mesh: Optional[str] = "1pod_16x16") -> List[Dict]:
+    out = []
+    for r in load(path):
+        if "error" in r or (mesh and r.get("mesh") != mesh):
+            continue
+        rl = r["roofline"]
+        out.append(
+            {
+                "arch": r["arch"],
+                "shape": r["shape"],
+                "mesh": r["mesh"],
+                "strategy": r.get("strategy", "?"),
+                "compute_s": rl["compute_s"],
+                "memory_s": rl["memory_s"],
+                "collective_s": rl["collective_s"],
+                "dominant": rl["dominant"],
+                "useful_ratio": rl["useful_flops_ratio"],
+                "roofline_fraction": rl["roofline_fraction"],
+            }
+        )
+    return out
+
+
+def markdown(path: str = DEFAULT, mesh: str = "1pod_16x16") -> str:
+    rs = rows(path, mesh)
+    lines = [
+        f"| arch | shape | strategy | compute (s) | memory (s) | collective (s) "
+        f"| dominant | useful FLOPs | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rs:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['strategy']} | "
+            f"{r['compute_s']:.4f} | {r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    if not os.path.exists(DEFAULT):
+        print("# no dryrun_results.json yet — run repro.launch.dryrun first")
+        return []
+    rs = rows()
+    print("arch,shape,strategy,compute_s,memory_s,collective_s,dominant,useful_ratio,roofline_fraction")
+    for r in rs:
+        print(
+            f"{r['arch']},{r['shape']},{r['strategy']},{r['compute_s']:.5f},"
+            f"{r['memory_s']:.5f},{r['collective_s']:.5f},{r['dominant']},"
+            f"{r['useful_ratio']:.3f},{r['roofline_fraction']:.3f}"
+        )
+    return rs
+
+
+if __name__ == "__main__":
+    main()

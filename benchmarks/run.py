@@ -1,0 +1,37 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one module per paper table/figure:
+
+  table1          paper Table 1: native vs CXLMemSim vs fine-grained baseline
+  accuracy        epoch analyzer vs event-by-event DES agreement
+  throughput      analyzer implementations: events/second (speed claim)
+  topology_sweep  Figure-1 topology × placement-policy delay decomposition
+  roofline        §Roofline table from the multi-pod dry-run JSON
+
+Run everything:      PYTHONPATH=src python -m benchmarks.run
+Run one:             PYTHONPATH=src python -m benchmarks.run table1
+"""
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import accuracy, roofline, table1, throughput, topology_sweep
+
+    suites = {
+        "table1": table1.main,
+        "accuracy": accuracy.main,
+        "throughput": throughput.main,
+        "topology_sweep": topology_sweep.main,
+        "roofline": roofline.main,
+    }
+    wanted = sys.argv[1:] or list(suites)
+    for name in wanted:
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.perf_counter()
+        suites[name]()
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Analyzer throughput: events/second for each implementation.
+
+The paper's speed claim (73× faster than Gem5) comes from replacing
+event-by-event simulation with epoch batching.  This benchmark measures
+simulation throughput (trace events per second of simulator time) for:
+
+  * fine-grained DES (the Gem5 stand-in),
+  * numpy epoch analyzer (ref),
+  * JAX epoch analyzer (jitted, inline congestion math),
+  * JAX epoch analyzer + Pallas congestion kernel (interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core.analyzer import EpochAnalyzer, FineGrainedSimulator, analyze_ref
+from repro.core.events import synthetic_trace
+from repro.core.topology import figure1_topology
+
+FLAT = figure1_topology().flatten()
+
+
+def _time(fn, ev, reps=3) -> float:
+    fn(ev)  # warm-up / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn(ev)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(sizes=(1_000, 10_000, 100_000)) -> List[Dict]:
+    rows = []
+    jax_an = EpochAnalyzer(FLAT)
+    pallas_an = EpochAnalyzer(FLAT, impl="pallas_interpret")
+    des = FineGrainedSimulator(FLAT, bandwidth_mode="per_txn")
+    for n in sizes:
+        ev = synthetic_trace(n, FLAT.n_pools, epoch_ns=1e6, seed=n, burstiness=0.5)
+        impls = {
+            "fine_grained_des": lambda e: des.simulate(e),
+            "epoch_numpy": lambda e: analyze_ref(FLAT, e),
+            "epoch_jax": lambda e: jax_an.analyze(e),
+        }
+        if n <= 10_000:  # interpret-mode kernel is slow on CPU; keep it bounded
+            impls["epoch_jax_pallas"] = lambda e: pallas_an.analyze(e)
+        for name, fn in impls.items():
+            dt = _time(fn, ev, reps=2 if n >= 100_000 else 3)
+            rows.append(
+                {"impl": name, "events": n, "s_per_epoch": dt, "events_per_s": n / dt}
+            )
+    return rows
+
+
+def main():
+    rows = run()
+    print("impl,events,s_per_epoch,events_per_s")
+    for r in rows:
+        print(f"{r['impl']},{r['events']},{r['s_per_epoch']:.5f},{r['events_per_s']:.0f}")
+    # headline: epoch vs DES at largest common size
+    des = {r["events"]: r for r in rows if r["impl"] == "fine_grained_des"}
+    jaxr = {r["events"]: r for r in rows if r["impl"] == "epoch_jax"}
+    common = max(set(des) & set(jaxr))
+    print(
+        f"# epoch_jax vs fine-grained speedup at {common} events: "
+        f"{des[common]['s_per_epoch'] / jaxr[common]['s_per_epoch']:.1f}x "
+        "(paper: 73x vs Gem5)"
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Topology / policy sweep: the tool's deployment use-case (paper §1,
+"allows data-center operators to evaluate potential topologies before
+procurement").
+
+One fixed workload (a training step of a zoo config), priced against:
+  topologies × placement policies × management granularities
+with the full three-delay decomposition per cell.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import (
+    CACHELINE_BYTES,
+    PAGE_BYTES,
+    CXLMemSim,
+    ClassMapPolicy,
+    InterleavePolicy,
+    LocalOnlyPolicy,
+    figure1_topology,
+    local_only_topology,
+    two_tier_topology,
+)
+from repro.core.analyzer import EpochAnalyzer
+from repro.core.tracer import synthesize_step_trace
+from repro.models.phases import build_regions_and_phases
+
+import repro.configs as cfgs
+
+
+def run(arch: str = "qwen3-0.6b") -> List[Dict]:
+    cfg = cfgs.get_smoke(arch)
+    rows = []
+    topos = {
+        "local_only": local_only_topology(),
+        "two_tier": two_tier_topology(),
+        "figure1": figure1_topology(),
+    }
+    for topo_name, topo in topos.items():
+        flat = topo.flatten()
+        remote = [n for n in flat.pool_names if n != "local_dram"]
+        policies = {"all_local": LocalOnlyPolicy()}
+        if remote:
+            policies["opt_offload"] = ClassMapPolicy({"opt_state": remote[0]})
+            policies["opt_offload_page"] = ClassMapPolicy(
+                {"opt_state": remote[0]}, granularity_bytes=PAGE_BYTES
+            )
+            if len(remote) >= 2:
+                policies["interleave"] = InterleavePolicy(
+                    remote, classes=["opt_state", "grad"]
+                )
+        for pol_name, pol in policies.items():
+            regions, phases = build_regions_and_phases(cfg, "train", batch=8, seq=256)
+            pol.place(regions, flat)
+            traces, native_ns, _ = synthesize_step_trace(
+                phases, regions, granularity_bytes=pol.granularity_bytes
+            )
+            an = EpochAnalyzer(flat)
+            bd = an.analyze(traces[0])
+            rows.append(
+                {
+                    "topology": topo_name,
+                    "policy": pol_name,
+                    "native_ms": native_ns[0] / 1e6,
+                    "latency_ms": bd.latency_ns / 1e6,
+                    "congestion_ms": bd.congestion_ns / 1e6,
+                    "bandwidth_ms": bd.bandwidth_ns / 1e6,
+                    "slowdown": (native_ns[0] + bd.total_ns) / native_ns[0],
+                }
+            )
+    return rows
+
+
+def main():
+    rows = run()
+    print("topology,policy,native_ms,latency_ms,congestion_ms,bandwidth_ms,slowdown")
+    for r in rows:
+        print(
+            f"{r['topology']},{r['policy']},{r['native_ms']:.3f},{r['latency_ms']:.3f},"
+            f"{r['congestion_ms']:.3f},{r['bandwidth_ms']:.3f},{r['slowdown']:.3f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""End-to-end driver: train a ~100M-param model for a few hundred steps with
+the full production stack — data pipeline, AdamW, periodic checkpoints,
+restart-on-resume, straggler watch, and CXLMemSim attached.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 200]
+
+The model is a 12-layer/640-dim dense GQA transformer (~100M params with the
+qwen3 tokenizer's vocab scaled down), trained on the synthetic pipeline.
+Interrupt it and re-run: it resumes from the newest committed checkpoint.
+"""
+
+import argparse
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.launch.train import train_loop
+from repro.models import ModelConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="dense-100m",
+        family="dense",
+        n_layers=12,
+        d_model=640,
+        n_heads=10,
+        n_kv_heads=2,
+        d_head=64,
+        d_ff=2560,
+        vocab_size=32768,
+        rope_variant="rope",
+        dtype=jnp.float32,
+        cache_dtype=jnp.float32,
+        remat=False,  # small model: no need on CPU
+    )
+    print(f"params: {cfg.param_counts()['total']/1e6:.1f}M")
+
+    out = train_loop(
+        cfg,
+        steps=args.steps,
+        batch=args.batch,
+        seq=args.seq,
+        lr=3e-4,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_interval=50,
+        simulate=True,  # CXLMemSim attached: optimizer state in a CXL pool
+        log_every=10,
+    )
+    print(f"\nfinal loss {out['final_loss']:.4f} after {out['steps']} steps "
+          f"({out['wall_s']:.0f}s wall, resumed from step {out['start_step']})")
+    first, last = out["losses"][0], out["final_loss"]
+    print(f"loss moved {first:.3f} -> {last:.3f} ({'OK: decreasing' if last < first else 'WARN'})")
+    if "sim" in out:
+        s = out["sim"]
+        print(
+            f"CXLMemSim: simulated slowdown {s['slowdown']:.3f}x "
+            f"(latency {s['latency_s']:.3f}s, bandwidth {s['bandwidth_s']:.3f}s "
+            f"over {s['epochs']} epochs)"
+        )
+
+
+if __name__ == "__main__":
+    main()

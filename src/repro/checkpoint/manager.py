@@ -1,0 +1,98 @@
+"""Fault-tolerance manager: periodic checkpoints, restart, straggler watch.
+
+Designed for the 1000+-node posture even though this build runs 1 host:
+
+  * **periodic atomic checkpoints** with retention (keep last N) — a pod
+    failure loses at most ``interval`` steps;
+  * **restart**: ``resume_or_init`` restores the newest committed step (with
+    elastic re-shard onto whatever mesh is live) or initializes fresh;
+  * **straggler mitigation hook**: per-step durations feed an EWMA; steps
+    slower than ``straggler_factor``× the EWMA are flagged, and the
+    CXLMemSim per-epoch timing decomposition says *which* component (pool
+    latency / switch congestion / bandwidth) is responsible — the simulator
+    doubles as the production telemetry model;
+  * **preemption-signal checkpoint**: ``request_checkpoint()`` forces a save
+    at the next step boundary (what a SIGTERM handler calls on real pods).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from . import ckpt
+
+__all__ = ["FaultToleranceConfig", "CheckpointManager"]
+
+
+@dataclasses.dataclass
+class FaultToleranceConfig:
+    directory: str = "/tmp/repro_ckpt"
+    interval_steps: int = 100
+    keep: int = 3
+    straggler_factor: float = 2.0
+    ewma_alpha: float = 0.1
+
+
+class CheckpointManager:
+    def __init__(self, cfg: FaultToleranceConfig):
+        self.cfg = cfg
+        self._ewma: Optional[float] = None
+        self._forced = False
+        self.straggler_events: List[Dict[str, Any]] = []
+
+    # ---- restart ------------------------------------------------------- #
+
+    def resume_or_init(self, init_fn: Callable[[], Any], shardings=None):
+        """Returns (state, start_step). state = whatever pytree init_fn makes."""
+        template = None
+        step = ckpt.latest_step(self.cfg.directory)
+        if step is None:
+            return init_fn(), 0
+        template = init_fn()
+        state, step = ckpt.restore_checkpoint(
+            self.cfg.directory, template, step=step, shardings=shardings
+        )
+        return state, step + 1
+
+    # ---- periodic save --------------------------------------------------- #
+
+    def request_checkpoint(self):
+        self._forced = True
+
+    def maybe_save(self, step: int, state) -> Optional[str]:
+        due = step > 0 and step % self.cfg.interval_steps == 0
+        if not (due or self._forced):
+            return None
+        self._forced = False
+        path = ckpt.save_checkpoint(self.cfg.directory, step, state)
+        self._gc()
+        return path
+
+    def _gc(self):
+        steps = ckpt.list_steps(self.cfg.directory)
+        import os, shutil
+
+        for s in steps[: -self.cfg.keep]:
+            shutil.rmtree(
+                os.path.join(self.cfg.directory, f"step_{s:08d}"), ignore_errors=True
+            )
+
+    # ---- straggler watch --------------------------------------------------- #
+
+    def observe_step(self, step: int, duration_s: float, detail: Optional[Dict] = None) -> bool:
+        """Feed a step duration; returns True if flagged as straggler."""
+        if self._ewma is None:
+            self._ewma = duration_s
+            return False
+        flagged = duration_s > self.cfg.straggler_factor * self._ewma
+        if flagged:
+            self.straggler_events.append(
+                {"step": step, "duration_s": duration_s, "ewma_s": self._ewma, **(detail or {})}
+            )
+        # EWMA excludes flagged steps so one straggler doesn't poison the baseline
+        if not flagged:
+            a = self.cfg.ewma_alpha
+            self._ewma = (1 - a) * self._ewma + a * duration_s
+        return flagged

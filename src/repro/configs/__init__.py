@@ -1,0 +1,136 @@
+"""Architecture registry + assigned input shapes + input_specs.
+
+40 assigned cells = 10 archs × 4 shapes.  ``cells()`` enumerates the
+runnable ones and records every skip with its reason (full-attention archs
+skip long_500k; the encoder-only arch skips decode shapes) — see DESIGN.md
+§Arch-applicability.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model, ModelConfig
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "Shape",
+    "cells",
+    "get_config",
+    "get_smoke",
+    "input_specs",
+]
+
+_MODULES = {
+    "mistral-large-123b": "mistral_large_123b",
+    "chatglm3-6b": "chatglm3_6b",
+    "starcoder2-3b": "starcoder2_3b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "hubert-xlarge": "hubert_xlarge",
+}
+
+ARCH_IDS: Tuple[str, ...] = tuple(_MODULES)
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", "train", 4_096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32_768, 128),
+    "long_500k": Shape("long_500k", "decode", 524_288, 1),
+}
+
+# families whose attention is full/quadratic -> long_500k skipped
+_FULL_ATTENTION = ("dense", "moe", "vlm")
+# sub-quadratic families run long_500k
+_SUBQUADRATIC = ("ssm", "hybrid")
+
+
+def _module(arch: str):
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str, shape: Optional[str] = None) -> ModelConfig:
+    mod = _module(arch)
+    cfg = mod.CONFIG
+    if shape == "long_500k" and hasattr(mod, "LONG"):
+        cfg = mod.LONG  # e.g. Jamba enables windowed attention at 500k
+    return cfg
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE
+
+
+def cells() -> List[Dict[str, Any]]:
+    """All 40 (arch × shape) cells with runnable flag + skip reason."""
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            skip = None
+            if shape.kind == "decode" and cfg.family == "audio":
+                skip = "encoder-only: no decode step"
+            elif sname == "long_500k" and cfg.family in _FULL_ATTENTION:
+                skip = "full quadratic attention: 500k decode infeasible by design"
+            out.append(
+                {"arch": arch, "shape": sname, "runnable": skip is None, "skip": skip}
+            )
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# --------------------------------------------------------------------------- #
+
+
+def input_specs(
+    cfg: ModelConfig, shape: Shape, batch_override: Optional[int] = None
+) -> Dict[str, Any]:
+    """ShapeDtypeStruct pytree for one step of (cfg × shape).
+
+    train:   {'tokens'|'embeds', 'labels'}
+    prefill: {'tokens'|'embeds'}
+    decode:  {'caches', 'token'|'embed', 'cache_len'}
+    """
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        if cfg.embed_inputs:
+            inp = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        else:
+            inp = {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.dtype)}
+        inp["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        return inp
+    if shape.kind == "prefill":
+        if cfg.embed_inputs:
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        return {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.dtype)}
+    if shape.kind == "decode":
+        model = Model(cfg)
+        caches = jax.eval_shape(lambda: model.init_caches(B, S))
+        if cfg.embed_inputs:
+            tok = {"token": jax.ShapeDtypeStruct((B, 1), i32)}
+        else:
+            tok = {"embed": jax.ShapeDtypeStruct((B, 1, cfg.d_model), cfg.dtype)}
+        return {"caches": caches, **tok, "cache_len": jax.ShapeDtypeStruct((), i32)}
+    raise ValueError(shape.kind)

@@ -1,0 +1,99 @@
+"""CXLMemSim core — the paper's contribution as a composable JAX library.
+
+Components (paper Figure 2):
+  Tracer  -> :mod:`repro.core.tracer`   (+ :mod:`repro.core.events` region map)
+  Timer   -> :mod:`repro.core.timer`
+  Timing Analyzer -> :mod:`repro.core.analyzer` (epoch, JAX) and the
+  fine-grained DES baseline (our Gem5 stand-in)
+  Topology -> :mod:`repro.core.topology`
+  Research surfaces -> :mod:`repro.core.policy` (placement),
+  :mod:`repro.core.migration` (sw/hw migration + prefetch),
+  :mod:`repro.core.coherency` (multi-host pool sharing)
+  Roofline -> :mod:`repro.core.roofline`
+"""
+
+from .analyzer import DelayBreakdown, EpochAnalyzer, FineGrainedSimulator, analyze_ref
+from .attach import AttachedProgram, CXLMemSim, SimReport
+from .coherency import CoherencyConfig, CoherencyModel
+from .events import (
+    CACHELINE_BYTES,
+    PAGE_BYTES,
+    MemEvents,
+    Region,
+    RegionMap,
+    concat_events,
+    synthetic_trace,
+)
+from .migration import MigrationConfig, MigrationSimulator
+from .policy import (
+    ClassMapPolicy,
+    HotnessTieredPolicy,
+    InterleavePolicy,
+    LocalOnlyPolicy,
+    PlacementPolicy,
+    capacity_check,
+)
+from .roofline import RooflineTerms, collective_bytes_from_hlo, roofline_terms
+from .timer import EpochSchedule, slice_by_quantum
+from .topology import (
+    FlatTopology,
+    Pool,
+    Switch,
+    Topology,
+    figure1_topology,
+    local_only_topology,
+    two_tier_topology,
+)
+from .tracer import (
+    Access,
+    HardwareModel,
+    Phase,
+    TPU_V5E,
+    hlo_cost_summary,
+    synthesize_step_trace,
+)
+
+__all__ = [
+    "Access",
+    "AttachedProgram",
+    "CACHELINE_BYTES",
+    "CXLMemSim",
+    "ClassMapPolicy",
+    "CoherencyConfig",
+    "CoherencyModel",
+    "DelayBreakdown",
+    "EpochAnalyzer",
+    "EpochSchedule",
+    "FineGrainedSimulator",
+    "FlatTopology",
+    "HardwareModel",
+    "HotnessTieredPolicy",
+    "InterleavePolicy",
+    "LocalOnlyPolicy",
+    "MemEvents",
+    "MigrationConfig",
+    "MigrationSimulator",
+    "PAGE_BYTES",
+    "Phase",
+    "PlacementPolicy",
+    "Pool",
+    "Region",
+    "RegionMap",
+    "RooflineTerms",
+    "SimReport",
+    "Switch",
+    "TPU_V5E",
+    "Topology",
+    "analyze_ref",
+    "capacity_check",
+    "collective_bytes_from_hlo",
+    "concat_events",
+    "figure1_topology",
+    "hlo_cost_summary",
+    "local_only_topology",
+    "roofline_terms",
+    "slice_by_quantum",
+    "synthetic_trace",
+    "synthesize_step_trace",
+    "two_tier_topology",
+]

@@ -1,0 +1,234 @@
+"""CXLMemSim.attach — the user-facing simulator (paper Figure 2, assembled).
+
+Wraps any jitted step function.  Per step:
+
+  1. dispatch the real step and measure native wall time (the paper's
+     "execution of the attached program");
+  2. cut the step's structural trace into epochs (Timer);
+  3. per epoch: apply migration remapping, inject coherency traffic, run the
+     Timing Analyzer, accumulate the three delays;
+  4. optionally ``time.sleep`` the computed delay — the paper's delay
+     injection, making the host observe simulated-topology speed.
+
+Two clocks are reported:
+
+  * ``native_s``    — measured host execution time,
+  * ``simulated_s`` — native + Σ delays (what the topology would impose),
+
+plus the per-component delay decomposition, per-pool/switch, per-epoch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from .analyzer import DelayBreakdown, EpochAnalyzer, FineGrainedSimulator
+from .coherency import CoherencyModel
+from .events import MemEvents, RegionMap
+from .migration import MigrationSimulator
+from .policy import PlacementPolicy, capacity_check
+from .timer import EpochSchedule
+from .topology import Topology
+from .tracer import HardwareModel, Phase, TPU_V5E, synthesize_step_trace
+
+__all__ = ["CXLMemSim", "AttachedProgram", "SimReport"]
+
+
+@dataclasses.dataclass
+class SimReport:
+    steps: int = 0
+    epochs: int = 0
+    native_s: float = 0.0
+    simulated_s: float = 0.0
+    latency_s: float = 0.0
+    congestion_s: float = 0.0
+    bandwidth_s: float = 0.0
+    coherency_s: float = 0.0
+    injected_sleep_s: float = 0.0
+    analyzer_s: float = 0.0  # simulator's own cost (overhead accounting)
+    per_pool_latency_ns: Optional[np.ndarray] = None
+    per_switch_congestion_ns: Optional[np.ndarray] = None
+    per_switch_bandwidth_ns: Optional[np.ndarray] = None
+    migration_moved_bytes: float = 0.0
+
+    @property
+    def slowdown(self) -> float:
+        """Simulated time / native time — the paper's headline metric."""
+        return self.simulated_s / self.native_s if self.native_s > 0 else float("nan")
+
+    @property
+    def overhead(self) -> float:
+        """(native + analyzer + injected) / native: host-side cost of simulating."""
+        if self.native_s <= 0:
+            return float("nan")
+        return (self.native_s + self.analyzer_s + self.injected_sleep_s) / self.native_s
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "steps": self.steps,
+            "epochs": self.epochs,
+            "native_s": self.native_s,
+            "simulated_s": self.simulated_s,
+            "slowdown": self.slowdown,
+            "latency_s": self.latency_s,
+            "congestion_s": self.congestion_s,
+            "bandwidth_s": self.bandwidth_s,
+            "coherency_s": self.coherency_s,
+            "analyzer_s": self.analyzer_s,
+        }
+
+
+class CXLMemSim:
+    """Configure once, attach to any number of step functions."""
+
+    def __init__(
+        self,
+        topology: Topology,
+        policy: PlacementPolicy,
+        epoch: EpochSchedule = EpochSchedule("step"),
+        hw: HardwareModel = TPU_V5E,
+        inject_delays: bool = False,
+        sample_rate: float = 1.0,
+        migration: Optional[MigrationSimulator] = None,
+        coherency: Optional[CoherencyModel] = None,
+        analyzer: str = "epoch",  # 'epoch' (paper) | 'fine' (Gem5-like baseline)
+        n_windows: int = 128,
+        check_capacity: bool = True,
+        max_events_per_access: int = 64,  # trace fidelity (higher = finer)
+    ):
+        self.topology = topology
+        self.flat = topology.flatten()
+        self.policy = policy
+        self.epoch = epoch
+        self.hw = hw
+        self.inject_delays = inject_delays
+        self.sample_rate = sample_rate
+        self.migration = migration
+        self.coherency = coherency
+        self.analyzer_kind = analyzer
+        self.n_windows = n_windows
+        self.check_capacity = check_capacity
+        self.max_events_per_access = max_events_per_access
+
+    def attach(
+        self,
+        step_fn: Callable[..., Any],
+        phases: Sequence[Phase],
+        regions: RegionMap,
+        calibration: float = 1.0,
+    ) -> "AttachedProgram":
+        self.policy.place(regions, self.flat)
+        if self.check_capacity:
+            capacity_check(regions, self.flat)
+        return AttachedProgram(self, step_fn, list(phases), regions, calibration)
+
+
+class AttachedProgram:
+    def __init__(
+        self,
+        sim: CXLMemSim,
+        step_fn: Callable[..., Any],
+        phases: List[Phase],
+        regions: RegionMap,
+        calibration: float,
+    ):
+        self.sim = sim
+        self.step_fn = step_fn
+        self.phases = phases
+        self.regions = regions
+        self.calibration = calibration
+        if sim.analyzer_kind == "epoch":
+            self._analyzer = EpochAnalyzer(sim.flat, n_windows=sim.n_windows)
+            self._analyze = self._analyzer.analyze
+        else:
+            self._analyzer = FineGrainedSimulator(sim.flat, bandwidth_mode="per_txn")
+            self._analyze = self._analyzer.simulate
+        self.report = SimReport(
+            per_pool_latency_ns=np.zeros((sim.flat.n_pools,)),
+            per_switch_congestion_ns=np.zeros((sim.flat.n_switches,)),
+            per_switch_bandwidth_ns=np.zeros((sim.flat.n_switches,)),
+        )
+        self._trace_cache: Optional[tuple] = None
+
+    # ------------------------------------------------------------------ #
+
+    def _traces(self):
+        """Structural traces are shape-static per step; cache across steps,
+        but recompute when migration has changed residency."""
+        if self._trace_cache is None or self.sim.migration is not None:
+            mode = "layer" if self.sim.epoch.mode == "layer" else "step"
+            traces, native_ns, names = synthesize_step_trace(
+                self.phases,
+                self.regions,
+                hw=self.sim.hw,
+                granularity_bytes=self.sim.policy.granularity_bytes,
+                max_events_per_access=self.sim.max_events_per_access,
+                calibration=self.calibration,
+                epoch_mode=mode,
+            )
+            if self.sim.epoch.mode == "quantum":
+                cut: List[MemEvents] = []
+                for tr in traces:
+                    cut.extend(self.sim.epoch.slices(tr))
+                traces = cut
+                native_ns = [self.sim.epoch.quantum_ns] * len(traces)
+                names = [f"q{i}" for i in range(len(traces))]
+            if self.sim.sample_rate < 1.0:
+                traces = [t.sample(self.sim.sample_rate, seed=i) for i, t in enumerate(traces)]
+            self._trace_cache = (traces, native_ns, names)
+        return self._trace_cache
+
+    def step(self, *args, **kwargs):
+        """Run one real step under simulation; returns the step's outputs."""
+        t0 = time.perf_counter()
+        out = self.step_fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        native = time.perf_counter() - t0
+        self.report.native_s += native
+        self.report.steps += 1
+
+        a0 = time.perf_counter()
+        delay_ns = 0.0
+        traces, _, _ = self._traces()
+        from .events import concat_events  # local import to avoid cycle
+
+        for tr in traces:
+            if self.sim.migration is not None:
+                tr, extra = self.sim.migration.observe_and_migrate(tr)
+                if extra.n:
+                    tr = concat_events([tr, extra])
+                self.report.migration_moved_bytes = self.sim.migration.moved_bytes_total
+            coh_ns = 0.0
+            if self.sim.coherency is not None:
+                bi, coh_ns = self.sim.coherency.epoch_traffic(tr)
+                if bi.n:
+                    tr = concat_events([tr, bi])
+            bd: DelayBreakdown = self._analyze(tr)
+            self.report.epochs += 1
+            self.report.latency_s += bd.latency_ns * 1e-9
+            self.report.congestion_s += bd.congestion_ns * 1e-9
+            self.report.bandwidth_s += bd.bandwidth_ns * 1e-9
+            self.report.coherency_s += coh_ns * 1e-9
+            self.report.per_pool_latency_ns += bd.per_pool_latency_ns
+            self.report.per_switch_congestion_ns += bd.per_switch_congestion_ns
+            self.report.per_switch_bandwidth_ns += bd.per_switch_bandwidth_ns
+            delay_ns += bd.total_ns + coh_ns
+        self.report.analyzer_s += time.perf_counter() - a0
+
+        self.report.simulated_s += native + delay_ns * 1e-9
+        if self.sim.inject_delays and delay_ns > 0:
+            # the paper's delay injection: the host program observes the
+            # simulated-topology execution speed
+            time.sleep(delay_ns * 1e-9)
+            self.report.injected_sleep_s += delay_ns * 1e-9
+        return out
+
+    def run(self, n_steps: int, *args, **kwargs) -> SimReport:
+        for _ in range(n_steps):
+            self.step(*args, **kwargs)
+        return self.report

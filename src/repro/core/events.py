@@ -1,0 +1,285 @@
+"""Memory-event traces and the region->pool allocation map.
+
+The paper's Tracer has two halves:
+
+  1. an *allocation* tracer (eBPF probes on mmap/sbrk/brk) that maintains a
+     map from address ranges to memory pools, and
+  2. an *event* tracer (PEBS) that samples memory operations.
+
+Our JAX-native analogue: every logical tensor region of a step function
+(weights, activations, KV cache, optimizer state, MoE experts, ...) is
+registered with a :class:`RegionMap`; a placement policy assigns each region
+to a pool.  Event traces are dense struct-of-arrays so the timing analyzer
+can be fully vectorized.
+
+Times inside a trace are **epoch-relative nanoseconds** (float).  Keeping
+them epoch-relative bounds their magnitude (epochs are ms-scale), so float32
+retains sub-ns resolution inside jitted analyzer code; totals are accumulated
+host-side in float64.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "CACHELINE_BYTES",
+    "PAGE_BYTES",
+    "MemEvents",
+    "Region",
+    "RegionMap",
+    "concat_events",
+    "synthetic_trace",
+]
+
+CACHELINE_BYTES = 64
+PAGE_BYTES = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class MemEvents:
+    """A struct-of-arrays trace of memory events within one epoch.
+
+    Attributes:
+      t_ns:    [N] issue time, ns, relative to epoch start, non-decreasing
+               not required (the analyzer sorts).
+      pool:    [N] int32 pool index into the FlatTopology.
+      bytes_:  [N] bytes moved by the event (a transaction may cover many
+               cachelines; granularity is the policy's choice).
+      is_write:[N] bool (writes may cost differently; coherency uses this).
+      region:  [N] int32 region id (for migration/hotness accounting).
+      weight:  [N] statistical multiplicity (1.0 exact; 1/rate under PEBS-style
+               sampling so count-proportional delays stay unbiased).
+    """
+
+    t_ns: np.ndarray
+    pool: np.ndarray
+    bytes_: np.ndarray
+    is_write: np.ndarray
+    region: np.ndarray
+    weight: np.ndarray = None  # type: ignore[assignment]
+
+    def __post_init__(self):
+        if self.weight is None:
+            object.__setattr__(self, "weight", np.ones((len(self.t_ns),), np.float64))
+        n = len(self.t_ns)
+        for f in ("pool", "bytes_", "is_write", "region", "weight"):
+            if len(getattr(self, f)) != n:
+                raise ValueError(f"field {f} length mismatch")
+
+    @property
+    def n(self) -> int:
+        return int(len(self.t_ns))
+
+    @property
+    def total_bytes(self) -> float:
+        return float(self.bytes_.sum())
+
+    def sorted_by_time(self) -> "MemEvents":
+        order = np.argsort(self.t_ns, kind="stable")
+        return self.take(order)
+
+    def take(self, idx: np.ndarray) -> "MemEvents":
+        return MemEvents(
+            t_ns=self.t_ns[idx],
+            pool=self.pool[idx],
+            bytes_=self.bytes_[idx],
+            is_write=self.is_write[idx],
+            region=self.region[idx],
+            weight=self.weight[idx],
+        )
+
+    def sample(self, rate: float, seed: int = 0) -> "MemEvents":
+        """PEBS-style sampling: keep each event with probability ``rate`` and
+        scale bytes by 1/rate so aggregate traffic is preserved in expectation.
+        """
+        if not (0.0 < rate <= 1.0):
+            raise ValueError("rate must be in (0, 1]")
+        if rate == 1.0:
+            return self
+        rng = np.random.default_rng(seed)
+        keep = rng.random(self.n) < rate
+        out = self.take(np.nonzero(keep)[0])
+        return MemEvents(
+            t_ns=out.t_ns,
+            pool=out.pool,
+            bytes_=out.bytes_ / rate,
+            is_write=out.is_write,
+            region=out.region,
+            weight=out.weight / rate,
+        )
+
+    @staticmethod
+    def empty() -> "MemEvents":
+        z = np.zeros((0,))
+        return MemEvents(
+            t_ns=z.astype(np.float64),
+            pool=z.astype(np.int32),
+            bytes_=z.astype(np.float64),
+            is_write=z.astype(bool),
+            region=z.astype(np.int32),
+        )
+
+    @staticmethod
+    def build(
+        t_ns: Iterable[float],
+        pool: Iterable[int],
+        bytes_: Iterable[float],
+        is_write: Optional[Iterable[bool]] = None,
+        region: Optional[Iterable[int]] = None,
+    ) -> "MemEvents":
+        t = np.asarray(list(t_ns), np.float64)
+        p = np.asarray(list(pool), np.int32)
+        b = np.asarray(list(bytes_), np.float64)
+        w = (
+            np.asarray(list(is_write), bool)
+            if is_write is not None
+            else np.zeros(len(t), bool)
+        )
+        r = (
+            np.asarray(list(region), np.int32)
+            if region is not None
+            else np.zeros(len(t), np.int32)
+        )
+        return MemEvents(t, p, b, w, r)
+
+
+def concat_events(traces: Sequence[MemEvents]) -> MemEvents:
+    traces = [t for t in traces if t.n]
+    if not traces:
+        return MemEvents.empty()
+    return MemEvents(
+        t_ns=np.concatenate([t.t_ns for t in traces]),
+        pool=np.concatenate([t.pool for t in traces]),
+        bytes_=np.concatenate([t.bytes_ for t in traces]),
+        is_write=np.concatenate([t.is_write for t in traces]),
+        region=np.concatenate([t.region for t in traces]),
+        weight=np.concatenate([t.weight for t in traces]),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Region map — the eBPF allocation-trace analogue
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class Region:
+    """A logical allocation (tensor class or individual buffer)."""
+
+    rid: int
+    name: str
+    nbytes: int
+    tensor_class: str  # 'param' | 'grad' | 'opt_state' | 'activation' | 'kvcache' | 'expert' | 'input' | 'other'
+    pool: int = 0  # pool index; set by a placement policy
+    access_count: float = 0.0  # running hotness statistic (per epoch window)
+
+
+class RegionMap:
+    """Maps logical regions to pools — the software analogue of the paper's
+    eBPF-maintained address-range map.
+
+    ``alloc`` corresponds to tracing mmap/sbrk/brk; ``free`` to munmap.
+    Placement policies (:mod:`repro.core.policy`) mutate ``Region.pool``.
+    """
+
+    def __init__(self):
+        self._regions: List[Region] = []
+        self._by_name: Dict[str, Region] = {}
+
+    def alloc(self, name: str, nbytes: int, tensor_class: str = "other", pool: int = 0) -> Region:
+        if name in self._by_name:
+            raise KeyError(f"region {name!r} already allocated")
+        r = Region(rid=len(self._regions), name=name, nbytes=int(nbytes), tensor_class=tensor_class, pool=pool)
+        self._regions.append(r)
+        self._by_name[name] = r
+        return r
+
+    def free(self, name: str) -> None:
+        r = self._by_name.pop(name)
+        # keep rid slot (traces may still reference it); mark empty
+        r.nbytes = 0
+
+    def __getitem__(self, name: str) -> Region:
+        return self._by_name[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._by_name
+
+    def __iter__(self):
+        return iter(self._regions)
+
+    def __len__(self) -> int:
+        return len(self._regions)
+
+    @property
+    def regions(self) -> List[Region]:
+        return list(self._regions)
+
+    def by_class(self, tensor_class: str) -> List[Region]:
+        return [r for r in self._regions if r.tensor_class == tensor_class]
+
+    def pool_of(self, name: str) -> int:
+        return self._by_name[name].pool
+
+    def pool_vector(self) -> np.ndarray:
+        """[n_regions] int32: region id -> pool id (dense lookup table)."""
+        out = np.zeros((len(self._regions),), np.int32)
+        for r in self._regions:
+            out[r.rid] = r.pool
+        return out
+
+    def bytes_per_pool(self, n_pools: int) -> np.ndarray:
+        out = np.zeros((n_pools,), np.float64)
+        for r in self._regions:
+            out[r.pool] += r.nbytes
+        return out
+
+    def total_bytes(self) -> int:
+        return sum(r.nbytes for r in self._regions)
+
+
+# --------------------------------------------------------------------------- #
+# Synthetic traces (tests / microbenchmarks)
+# --------------------------------------------------------------------------- #
+
+
+def synthetic_trace(
+    n_events: int,
+    n_pools: int,
+    epoch_ns: float = 1e6,
+    granule_bytes: float = CACHELINE_BYTES,
+    pool_probs: Optional[Sequence[float]] = None,
+    write_frac: float = 0.3,
+    seed: int = 0,
+    burstiness: float = 0.0,
+) -> MemEvents:
+    """Random trace generator used by tests and the microbenchmark suite.
+
+    ``burstiness`` in [0, 1): 0 => uniform issue times; near 1 => events
+    clustered into bursts (stress for congestion/bandwidth modelling).
+    """
+    rng = np.random.default_rng(seed)
+    if pool_probs is None:
+        pool_probs = np.full((n_pools,), 1.0 / n_pools)
+    pool_probs = np.asarray(pool_probs, np.float64)
+    pool_probs = pool_probs / pool_probs.sum()
+    if burstiness > 0:
+        n_bursts = max(1, int(n_events * (1 - burstiness) / 16) + 1)
+        centers = rng.uniform(0, epoch_ns, size=n_bursts)
+        t = rng.choice(centers, size=n_events) + rng.exponential(
+            scale=max(epoch_ns * (1 - burstiness) * 1e-3, 1.0), size=n_events
+        )
+        t = np.clip(t, 0, epoch_ns)
+    else:
+        t = rng.uniform(0, epoch_ns, size=n_events)
+    return MemEvents(
+        t_ns=np.sort(t),
+        pool=rng.choice(n_pools, size=n_events, p=pool_probs).astype(np.int32),
+        bytes_=np.full((n_events,), float(granule_bytes)),
+        is_write=rng.random(n_events) < write_frac,
+        region=np.zeros((n_events,), np.int32),
+    )

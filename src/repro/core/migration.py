@@ -1,0 +1,124 @@
+"""Hot/cold migration and prefetch simulation (paper §1 research uses:
+"comparison of software and hardware memory prefetching and migration").
+
+Both mechanisms are simulated **on top of the same trace**: given per-epoch
+access counts per region, a migration policy decides promotions (pool -> local)
+and demotions (local -> pool); the migration traffic itself is injected as
+extra events so the analyzer charges its latency/bandwidth cost.
+
+* software migration: decisions at epoch boundaries, page granularity —
+  models an OS tiering daemon (e.g. TPP/HeMem-style).
+* hardware migration: decisions applied mid-epoch after a short reaction
+  time, cacheline granularity — models a device-side HW prefetcher.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from .events import CACHELINE_BYTES, PAGE_BYTES, MemEvents, RegionMap, concat_events
+from .topology import FlatTopology
+
+__all__ = ["MigrationConfig", "MigrationSimulator"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationConfig:
+    mode: str = "software"  # 'software' | 'hardware' | 'off'
+    promote_threshold: float = 64.0  # accesses/epoch to promote a region
+    demote_threshold: float = 4.0  # accesses/epoch below which to demote
+    local_budget_bytes: int = 16 * 2**30
+    reaction_ns: float = 0.0  # hardware mode: reaction latency before moves
+    granularity_bytes: int = PAGE_BYTES  # sw: pages; hw typically cachelines
+
+    def __post_init__(self):
+        if self.mode not in ("software", "hardware", "off"):
+            raise ValueError(self.mode)
+
+
+class MigrationSimulator:
+    """Stateful across epochs: tracks region residency and hotness EWMA."""
+
+    def __init__(self, cfg: MigrationConfig, regions: RegionMap, flat: FlatTopology):
+        self.cfg = cfg
+        self.regions = regions
+        self.flat = flat
+        self._home_pool = {r.rid: r.pool for r in regions}  # policy-assigned home
+        self._hot_ewma: Dict[int, float] = {r.rid: 0.0 for r in regions}
+        self._local_used = sum(r.nbytes for r in regions if r.pool == 0)
+        self.moved_bytes_total = 0.0
+        self.promotions = 0
+        self.demotions = 0
+
+    def observe_and_migrate(self, trace: MemEvents) -> Tuple[MemEvents, MemEvents]:
+        """Update hotness from this epoch's trace; emit migration traffic.
+
+        Returns ``(remapped_trace, migration_events)``: the input trace with
+        pools rewritten to current residency, plus the extra copy traffic.
+        """
+        if self.cfg.mode == "off" or trace.n == 0:
+            return trace, MemEvents.empty()
+
+        counts = np.bincount(trace.region, minlength=len(self.regions))
+        for r in self.regions:
+            c = float(counts[r.rid]) if r.rid < len(counts) else 0.0
+            self._hot_ewma[r.rid] = 0.5 * self._hot_ewma[r.rid] + 0.5 * c
+            r.access_count = self._hot_ewma[r.rid]
+
+        epoch_end = float(trace.t_ns.max()) if trace.n else 0.0
+        move_t = (
+            min(self.cfg.reaction_ns, epoch_end)
+            if self.cfg.mode == "hardware"
+            else epoch_end  # software migrates at the epoch boundary
+        )
+
+        migration: List[MemEvents] = []
+        # demote cold local residents first (frees budget), then promote hot
+        for r in sorted(self.regions, key=lambda r: self._hot_ewma[r.rid]):
+            if (
+                r.pool == 0
+                and self._home_pool[r.rid] != 0
+                and self._hot_ewma[r.rid] < self.cfg.demote_threshold
+            ):
+                migration.append(self._copy_events(r, src=0, dst=self._home_pool[r.rid], t=move_t))
+                r.pool = self._home_pool[r.rid]
+                self._local_used -= r.nbytes
+                self.demotions += 1
+        for r in sorted(self.regions, key=lambda r: -self._hot_ewma[r.rid]):
+            if (
+                r.pool != 0
+                and self._hot_ewma[r.rid] >= self.cfg.promote_threshold
+                and self._local_used + r.nbytes <= self.cfg.local_budget_bytes
+            ):
+                migration.append(self._copy_events(r, src=r.pool, dst=0, t=move_t))
+                r.pool = 0
+                self._local_used += r.nbytes
+                self.promotions += 1
+
+        # remap trace events issued after the (hardware) move point
+        pool_vec = self.regions.pool_vector()
+        new_pool = pool_vec[trace.region]
+        if self.cfg.mode == "hardware":
+            applied = trace.t_ns >= move_t
+            new_pool = np.where(applied, new_pool, trace.pool)
+        else:
+            new_pool = trace.pool  # software: remap takes effect next epoch
+        remapped = MemEvents(trace.t_ns, new_pool.astype(np.int32), trace.bytes_, trace.is_write, trace.region)
+        return remapped, concat_events(migration)
+
+    def _copy_events(self, r, src: int, dst: int, t: float) -> MemEvents:
+        """A migration is a read stream from src + write stream to dst."""
+        g = float(self.cfg.granularity_bytes)
+        n = max(int(np.ceil(r.nbytes / g)), 1)
+        n = min(n, 4096)  # batch granules into at most 4096 transactions
+        per = r.nbytes / n
+        tt = np.full((2 * n,), t, np.float64)
+        pool = np.concatenate([np.full((n,), src), np.full((n,), dst)]).astype(np.int32)
+        by = np.full((2 * n,), per, np.float64)
+        wr = np.concatenate([np.zeros((n,), bool), np.ones((n,), bool)])
+        reg = np.full((2 * n,), r.rid, np.int32)
+        self.moved_bytes_total += float(r.nbytes)
+        return MemEvents(tt, pool, by, wr, reg)

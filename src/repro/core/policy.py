@@ -1,0 +1,188 @@
+"""Placement policies: which regions live in which memory pool.
+
+This is the research surface the paper says CXLMemSim enables ("memory
+scheduling for complex applications", "comparison of cache-line and page
+memory management").  A policy assigns every :class:`~repro.core.events.Region`
+a pool; the tracer then emits events against those pools.
+
+Policies are deliberately simple, composable objects so experiments can sweep
+them (see ``examples/topology_explorer.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Sequence
+
+import numpy as np
+
+from .events import CACHELINE_BYTES, PAGE_BYTES, Region, RegionMap
+from .topology import FlatTopology
+
+__all__ = [
+    "PlacementPolicy",
+    "LocalOnlyPolicy",
+    "ClassMapPolicy",
+    "InterleavePolicy",
+    "HotnessTieredPolicy",
+    "capacity_check",
+]
+
+
+class PlacementPolicy:
+    """Base: assigns pools to regions; granularity controls event batching.
+
+    ``granularity_bytes`` is the transaction granule the tracer uses when it
+    expands a logical access into events: 64 B cachelines model hardware
+    (CXL-native) management; 4 KiB pages model software (OS) management.
+    """
+
+    name = "base"
+
+    def __init__(self, granularity_bytes: int = CACHELINE_BYTES):
+        if granularity_bytes <= 0:
+            raise ValueError("granularity must be positive")
+        self.granularity_bytes = int(granularity_bytes)
+
+    def place(self, regions: RegionMap, flat: FlatTopology) -> None:
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        gran = "cacheline" if self.granularity_bytes == CACHELINE_BYTES else (
+            "page" if self.granularity_bytes == PAGE_BYTES else f"{self.granularity_bytes}B"
+        )
+        return f"{self.name}(granularity={gran})"
+
+
+class LocalOnlyPolicy(PlacementPolicy):
+    """Everything in local DRAM — the native-execution baseline."""
+
+    name = "local_only"
+
+    def place(self, regions: RegionMap, flat: FlatTopology) -> None:
+        for r in regions:
+            r.pool = 0
+
+
+class ClassMapPolicy(PlacementPolicy):
+    """Static mapping from tensor class to pool (by name).
+
+    The canonical CXL experiments: ``{'opt_state': 'cxl_pool'}`` (optimizer
+    offload), ``{'kvcache': 'cxl_pool'}`` (KV-cache offload),
+    ``{'expert': 'cxl_pool'}`` (cold-expert offload for MoE).
+    """
+
+    name = "class_map"
+
+    def __init__(
+        self,
+        class_to_pool: Mapping[str, str],
+        granularity_bytes: int = CACHELINE_BYTES,
+    ):
+        super().__init__(granularity_bytes)
+        self.class_to_pool = dict(class_to_pool)
+
+    def place(self, regions: RegionMap, flat: FlatTopology) -> None:
+        name_to_idx = {n: i for i, n in enumerate(flat.pool_names)}
+        for r in regions:
+            target = self.class_to_pool.get(r.tensor_class)
+            r.pool = name_to_idx[target] if target is not None else 0
+
+
+class InterleavePolicy(PlacementPolicy):
+    """Round-robin regions across a set of pools (weighted).
+
+    Models NUMA-style interleaving across CXL expanders to spread bandwidth.
+    """
+
+    name = "interleave"
+
+    def __init__(
+        self,
+        pools: Sequence[str],
+        weights: Optional[Sequence[float]] = None,
+        classes: Optional[Sequence[str]] = None,  # None => every class
+        granularity_bytes: int = CACHELINE_BYTES,
+    ):
+        super().__init__(granularity_bytes)
+        self.pools = list(pools)
+        self.weights = list(weights) if weights is not None else [1.0] * len(self.pools)
+        if len(self.weights) != len(self.pools):
+            raise ValueError("weights/pools length mismatch")
+        self.classes = set(classes) if classes is not None else None
+
+    def place(self, regions: RegionMap, flat: FlatTopology) -> None:
+        name_to_idx = {n: i for i, n in enumerate(flat.pool_names)}
+        idxs = [name_to_idx[p] for p in self.pools]
+        w = np.asarray(self.weights, np.float64)
+        w = w / w.sum()
+        # deterministic weighted round-robin by cumulative byte share
+        placed_bytes = np.zeros((len(idxs),), np.float64)
+        for r in regions:
+            if self.classes is not None and r.tensor_class not in self.classes:
+                r.pool = 0
+                continue
+            total = placed_bytes.sum() + 1e-9
+            deficit = w - placed_bytes / total
+            k = int(np.argmax(deficit))
+            r.pool = idxs[k]
+            placed_bytes[k] += r.nbytes
+
+
+class HotnessTieredPolicy(PlacementPolicy):
+    """Hottest regions local until local capacity is exhausted; rest to the
+    fallback pool — a static tiering oracle given access statistics.
+
+    ``hotness`` maps region name -> access count (e.g. harvested from a prior
+    profiled run via :class:`~repro.core.attach.CXLMemSim`).
+    """
+
+    name = "hotness_tiered"
+
+    def __init__(
+        self,
+        fallback_pool: str,
+        hotness: Optional[Mapping[str, float]] = None,
+        local_budget_bytes: Optional[int] = None,
+        granularity_bytes: int = PAGE_BYTES,
+    ):
+        super().__init__(granularity_bytes)
+        self.fallback_pool = fallback_pool
+        self.hotness = dict(hotness or {})
+        self.local_budget_bytes = local_budget_bytes
+
+    def place(self, regions: RegionMap, flat: FlatTopology) -> None:
+        name_to_idx = {n: i for i, n in enumerate(flat.pool_names)}
+        fb = name_to_idx[self.fallback_pool]
+        budget = (
+            self.local_budget_bytes
+            if self.local_budget_bytes is not None
+            else int(flat.pool_capacity[0])
+        )
+        # hotness density = accesses per byte; hottest-per-byte goes local first
+        def density(r: Region) -> float:
+            h = self.hotness.get(r.name, r.access_count)
+            return h / max(r.nbytes, 1)
+
+        used = 0
+        for r in sorted(regions, key=density, reverse=True):
+            if used + r.nbytes <= budget:
+                r.pool = 0
+                used += r.nbytes
+            else:
+                r.pool = fb
+
+
+def capacity_check(regions: RegionMap, flat: FlatTopology) -> Dict[str, float]:
+    """Bytes placed per pool vs capacity; raises on overflow."""
+    per_pool = regions.bytes_per_pool(flat.n_pools)
+    report = {}
+    for i, name in enumerate(flat.pool_names):
+        cap = float(flat.pool_capacity[i])
+        report[name] = per_pool[i] / cap if cap > 0 else 0.0
+        if per_pool[i] > cap:
+            raise ValueError(
+                f"pool {name} over capacity: {per_pool[i] / 2**30:.1f} GiB "
+                f"placed, {cap / 2**30:.1f} GiB available"
+            )
+    return report

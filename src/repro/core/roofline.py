@@ -1,0 +1,213 @@
+"""Roofline analysis from dry-run compiled artifacts.
+
+Three terms per (arch × shape × mesh), per the brief:
+
+    compute_s    = HLO_FLOPs / peak_FLOP/s          (per chip: the compiled
+                   module under SPMD is the per-device program)
+    memory_s     = HLO_bytes / HBM_bw
+    collective_s = collective_bytes / link_bw
+
+``cost_analysis()`` provides FLOPs and bytes; collective bytes are parsed
+from the compiled HLO text: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op's shapes are summed with ring-algorithm
+traffic factors.
+
+The same machinery doubles as the simulator's ICI model: a TPU pod's ICI
+fabric is representable as a CXLMemSim topology (links = switches), which is
+how the paper's technique and the roofline engine share one analyzer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+from .tracer import HardwareModel, TPU_V5E
+
+__all__ = [
+    "RooflineTerms",
+    "collective_bytes_from_hlo",
+    "roofline_terms",
+    "DTYPE_BYTES",
+]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# shapes like  bf16[8,128,1024]{2,1,0}  or  f32[]  (layout braces optional)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# collective op line:  %name = <result-shapes> <opname>(
+_COLL_RE = re.compile(
+    r"=\s*(\(?[^)]*?\)?)\s*"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(fragment: str) -> float:
+    """Sum byte sizes of every dtype[shape] occurrence in ``fragment``."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(fragment):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota format [num_groups, group_size]<=[total]
+        return int(m.group(2))
+    return default
+
+
+def collective_bytes_from_hlo(
+    hlo_text: str, default_group_size: int = 1
+) -> Dict[str, float]:
+    """Per-device bytes moved over the interconnect, by collective type.
+
+    Ring-algorithm traffic factors on the *result* shape R with group size g:
+
+      all-reduce          2·(g−1)/g · R       (R == operand)
+      all-gather          (g−1)/g · R         (R is the gathered full size)
+      reduce-scatter      (g−1) · R           (operand = g·R)
+      all-to-all          (g−1)/g · R
+      collective-permute  R
+    """
+    out: Dict[str, float] = {
+        "all-reduce": 0.0,
+        "all-gather": 0.0,
+        "reduce-scatter": 0.0,
+        "all-to-all": 0.0,
+        "collective-permute": 0.0,
+    }
+    counts: Dict[str, int] = {k: 0 for k in out}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result_frag, opname = m.group(1), m.group(2)
+        kind = opname.replace("-start", "")
+        nbytes = _shape_bytes(result_frag)
+        if nbytes <= 0:
+            continue
+        g = _group_size(line, default_group_size)
+        if kind == "collective-permute":
+            factor = 1.0  # pairwise: always moves the result bytes
+        elif g <= 1:
+            # single-participant collective moves nothing
+            factor = 0.0
+        elif kind == "all-reduce":
+            factor = 2.0 * (g - 1) / g
+        elif kind == "all-gather":
+            factor = (g - 1) / g
+        elif kind == "reduce-scatter":
+            factor = float(g - 1)
+        elif kind == "all-to-all":
+            factor = (g - 1) / g
+        else:  # pragma: no cover — exhaustive above
+            factor = 1.0
+        out[kind] += nbytes * factor
+        counts[kind] += 1
+    out["total"] = sum(out.values())
+    out.update({f"n_{k}": float(v) for k, v in counts.items()})
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float  # 6·N·D (train) or 2·N·tokens (inference), per chip
+    n_chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Roofline lower bound on step time: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat / redundant compute."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops > 0 else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / roofline bound — the score we report.
+
+        = (MODEL_FLOPS/peak) / max(compute, memory, collective): how close the
+        step would run to ideal hardware speed if it achieved its bound.
+        """
+        if self.bound_s <= 0:
+            return 0.0
+        ideal = self.model_flops / (self.hlo_flops / max(self.compute_s, 1e-30))
+        return ideal / self.bound_s
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "bound_s": self.bound_s,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "n_chips": self.n_chips,
+        }
+
+
+def roofline_terms(
+    hlo_flops: float,
+    hlo_bytes: float,
+    collective_bytes: float,
+    model_flops: float,
+    n_chips: int,
+    hw: HardwareModel = TPU_V5E,
+) -> RooflineTerms:
+    """All inputs are per-device quantities from the compiled SPMD module."""
+    return RooflineTerms(
+        compute_s=hlo_flops / hw.peak_flops,
+        memory_s=hlo_bytes / (hw.hbm_gbps * 1e9),
+        collective_s=collective_bytes / (hw.ici_gbps * 1e9),
+        hlo_flops=hlo_flops,
+        hlo_bytes=hlo_bytes,
+        collective_bytes=collective_bytes,
+        model_flops=model_flops,
+        n_chips=n_chips,
+    )

@@ -1,0 +1,323 @@
+"""CXL.mem topology model (paper §2, Figure 1).
+
+A topology is a tree: a CXL Root Complex (RC) at the root, CXL switches as
+internal nodes, and memory pools (expanders) as leaves.  Local DRAM is pool 0
+and hangs directly off the memory controller (empty switch path).  Every
+component is annotated with the paper's three quantities:
+
+  * ``latency_ns``  — added round-trip latency of traversing the component,
+  * ``bandwidth_gbps`` — sustained bandwidth (GB/s) through the component,
+  * ``stt_ns``      — serial transmission time: minimum spacing between two
+                      transactions through the same component (switches only).
+
+``FlatTopology`` lowers the tree to dense arrays so the timing analyzer
+(:mod:`repro.core.analyzer`) can be vectorized / jitted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Pool",
+    "Switch",
+    "Topology",
+    "FlatTopology",
+    "figure1_topology",
+    "local_only_topology",
+    "two_tier_topology",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Switch:
+    """A CXL switch (or the Root Complex, which behaves like one)."""
+
+    name: str
+    latency_ns: float  # added latency per transaction through this switch
+    bandwidth_gbps: float  # GB/s through the switch
+    stt_ns: float  # serial transmission time (min gap between transactions)
+    parent: Optional[str] = None  # parent switch name; None => attached to RC
+
+
+@dataclasses.dataclass(frozen=True)
+class Pool:
+    """A memory pool / expander (leaf of the topology tree)."""
+
+    name: str
+    latency_ns: float  # device media latency (round trip, added)
+    bandwidth_gbps: float  # device-side bandwidth
+    capacity_bytes: int
+    parent: Optional[str] = None  # switch it hangs off; None => direct to RC
+    is_local: bool = False  # True only for local DRAM
+
+
+class Topology:
+    """A validated CXL.mem topology tree.
+
+    Construction order does not matter; ``validate()`` checks the tree is
+    acyclic, parents exist, and there is exactly one local DRAM pool.
+    """
+
+    def __init__(
+        self,
+        pools: Sequence[Pool],
+        switches: Sequence[Switch] = (),
+        rc_latency_ns: float = 10.0,
+        rc_bandwidth_gbps: float = 256.0,
+        rc_stt_ns: float = 0.5,
+        local_dram_latency_ns: float = 88.9,  # paper's measured platform latency
+    ):
+        self.pools: List[Pool] = list(pools)
+        self.switches: List[Switch] = list(switches)
+        self.rc_latency_ns = float(rc_latency_ns)
+        self.rc_bandwidth_gbps = float(rc_bandwidth_gbps)
+        self.rc_stt_ns = float(rc_stt_ns)
+        self.local_dram_latency_ns = float(local_dram_latency_ns)
+        self._switch_by_name: Dict[str, Switch] = {s.name: s for s in self.switches}
+        self._pool_index: Dict[str, int] = {p.name: i for i, p in enumerate(self.pools)}
+        self.validate()
+
+    # ------------------------------------------------------------------ #
+
+    def validate(self) -> None:
+        if len({p.name for p in self.pools}) != len(self.pools):
+            raise ValueError("duplicate pool names")
+        if len(self._switch_by_name) != len(self.switches):
+            raise ValueError("duplicate switch names")
+        locals_ = [p for p in self.pools if p.is_local]
+        if len(locals_) != 1:
+            raise ValueError(f"need exactly one local DRAM pool, got {len(locals_)}")
+        if self.pools.index(locals_[0]) != 0:
+            raise ValueError("local DRAM must be pool index 0")
+        if locals_[0].parent is not None:
+            raise ValueError("local DRAM must attach directly (parent=None)")
+        for s in self.switches:
+            if s.parent is not None and s.parent not in self._switch_by_name:
+                raise ValueError(f"switch {s.name}: unknown parent {s.parent}")
+        for p in self.pools:
+            if p.parent is not None and p.parent not in self._switch_by_name:
+                raise ValueError(f"pool {p.name}: unknown parent {p.parent}")
+        # acyclicity: walk each switch to the RC with a step bound
+        for s in self.switches:
+            seen = set()
+            cur: Optional[str] = s.name
+            while cur is not None:
+                if cur in seen:
+                    raise ValueError(f"cycle through switch {cur}")
+                seen.add(cur)
+                cur = self._switch_by_name[cur].parent
+
+    # ------------------------------------------------------------------ #
+
+    def pool_index(self, name: str) -> int:
+        return self._pool_index[name]
+
+    def switch_path(self, pool: Pool) -> List[Switch]:
+        """Switches traversed from the pool up to (not including) the RC."""
+        path: List[Switch] = []
+        cur = pool.parent
+        while cur is not None:
+            sw = self._switch_by_name[cur]
+            path.append(sw)
+            cur = sw.parent
+        return path
+
+    def pool_total_latency_ns(self, pool: Pool) -> float:
+        """End-to-end added latency of one access to ``pool``.
+
+        Local DRAM: its media latency only.  Remote pools: media latency +
+        every switch on the path + the RC.
+        """
+        if pool.is_local:
+            return pool.latency_ns
+        lat = pool.latency_ns + self.rc_latency_ns
+        for sw in self.switch_path(pool):
+            lat += sw.latency_ns
+        return lat
+
+    def pool_path_bandwidth_gbps(self, pool: Pool) -> float:
+        """Min bandwidth along the path (bottleneck link)."""
+        bw = pool.bandwidth_gbps
+        if not pool.is_local:
+            bw = min(bw, self.rc_bandwidth_gbps)
+            for sw in self.switch_path(pool):
+                bw = min(bw, sw.bandwidth_gbps)
+        return bw
+
+    def flatten(self) -> "FlatTopology":
+        return FlatTopology.from_topology(self)
+
+    def describe(self) -> str:
+        lines = [
+            f"Topology: {len(self.pools)} pools, {len(self.switches)} switches "
+            f"(RC lat={self.rc_latency_ns}ns bw={self.rc_bandwidth_gbps}GB/s "
+            f"stt={self.rc_stt_ns}ns; local DRAM lat={self.local_dram_latency_ns}ns)"
+        ]
+        for p in self.pools:
+            path = " -> ".join(s.name for s in self.switch_path(p)) or "(direct)"
+            lines.append(
+                f"  pool[{self.pool_index(p.name)}] {p.name}: lat={p.latency_ns}ns "
+                f"bw={p.bandwidth_gbps}GB/s cap={p.capacity_bytes / 2**30:.1f}GiB "
+                f"path={path} total_lat={self.pool_total_latency_ns(p):.1f}ns"
+            )
+        for s in self.switches:
+            lines.append(
+                f"  switch {s.name}: lat={s.latency_ns}ns bw={s.bandwidth_gbps}GB/s "
+                f"stt={s.stt_ns}ns parent={s.parent or 'RC'}"
+            )
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatTopology:
+    """Dense-array lowering of a :class:`Topology` for the analyzer.
+
+    Switch index S-1 is always the RC (remote accesses traverse it); switch
+    arrays therefore have ``n_switches + 1`` entries.
+    """
+
+    n_pools: int
+    n_switches: int  # including the RC pseudo-switch (last index)
+    pool_latency_ns: np.ndarray  # [P] total added latency per access
+    pool_bandwidth_gbps: np.ndarray  # [P] bottleneck bandwidth on path
+    pool_capacity: np.ndarray  # [P] bytes
+    local_latency_ns: float
+    # route[P, S] == 1 iff accesses to pool P traverse switch S
+    route: np.ndarray
+    switch_stt_ns: np.ndarray  # [S]
+    switch_bandwidth_gbps: np.ndarray  # [S]
+    # depth of each switch in the tree (RC = 0, children of RC = 1, ...).
+    # The analyzer cascades serial queues deepest-first so an event's shift at
+    # a leaf switch is visible when it merges at its parent — matching the
+    # event-by-event fine-grained simulator.
+    switch_depth: np.ndarray
+    pool_names: Tuple[str, ...]
+    switch_names: Tuple[str, ...]
+
+    def stage_order(self) -> np.ndarray:
+        """Switch indices ordered deepest-first (RC last)."""
+        return np.argsort(-self.switch_depth, kind="stable")
+
+    @staticmethod
+    def from_topology(t: Topology) -> "FlatTopology":
+        P = len(t.pools)
+        S = len(t.switches) + 1  # + RC
+        pool_lat = np.zeros((P,), np.float64)
+        pool_bw = np.zeros((P,), np.float64)
+        pool_cap = np.zeros((P,), np.float64)
+        route = np.zeros((P, S), np.float64)
+        sw_index = {s.name: i for i, s in enumerate(t.switches)}
+        for i, p in enumerate(t.pools):
+            pool_lat[i] = t.pool_total_latency_ns(p)
+            pool_bw[i] = t.pool_path_bandwidth_gbps(p)
+            pool_cap[i] = p.capacity_bytes
+            if not p.is_local:
+                route[i, S - 1] = 1.0  # RC
+                for sw in t.switch_path(p):
+                    route[i, sw_index[sw.name]] = 1.0
+        stt = np.array([s.stt_ns for s in t.switches] + [t.rc_stt_ns], np.float64)
+        sw_bw = np.array(
+            [s.bandwidth_gbps for s in t.switches] + [t.rc_bandwidth_gbps], np.float64
+        )
+
+        def depth(sw: Switch) -> int:
+            d = 1
+            cur = sw.parent
+            while cur is not None:
+                d += 1
+                cur = t._switch_by_name[cur].parent
+            return d
+
+        sw_depth = np.array([depth(s) for s in t.switches] + [0], np.int32)
+        return FlatTopology(
+            n_pools=P,
+            n_switches=S,
+            pool_latency_ns=pool_lat,
+            pool_bandwidth_gbps=pool_bw,
+            pool_capacity=pool_cap,
+            local_latency_ns=t.local_dram_latency_ns,
+            route=route,
+            switch_stt_ns=stt,
+            switch_bandwidth_gbps=sw_bw,
+            switch_depth=sw_depth,
+            pool_names=tuple(p.name for p in t.pools),
+            switch_names=tuple(s.name for s in t.switches) + ("RC",),
+        )
+
+
+# --------------------------------------------------------------------------- #
+# Canonical topologies
+# --------------------------------------------------------------------------- #
+
+
+def local_only_topology(capacity_gib: float = 96.0) -> Topology:
+    """Degenerate topology: local DRAM only (native execution baseline)."""
+    return Topology(
+        pools=[
+            Pool(
+                "local_dram",
+                latency_ns=88.9,
+                bandwidth_gbps=76.8,  # DDR5-4800 dual channel
+                capacity_bytes=int(capacity_gib * 2**30),
+                is_local=True,
+            )
+        ]
+    )
+
+
+def figure1_topology() -> Topology:
+    """The paper's Figure 1: two CXL switches, three memory pools.
+
+    The figure annotates BW/Lat/STT per component; the published text embeds
+    them in an image, so we use representative CXL 2.0 numbers (x8 PCIe 5.0
+    links, ~70 ns switch traversal) consistent with the paper's prose.
+
+        RC ── switch0 ── pool1 (near pool, direct expander)
+              └─ switch1 ── pool2, pool3 (far pools behind 2nd-level switch)
+    """
+    return Topology(
+        pools=[
+            Pool("local_dram", 88.9, 76.8, int(96 * 2**30), is_local=True),
+            Pool("cxl_pool1", 150.0, 32.0, int(128 * 2**30), parent="switch0"),
+            Pool("cxl_pool2", 180.0, 32.0, int(256 * 2**30), parent="switch1"),
+            Pool("cxl_pool3", 180.0, 32.0, int(256 * 2**30), parent="switch1"),
+        ],
+        switches=[
+            Switch("switch0", latency_ns=70.0, bandwidth_gbps=64.0, stt_ns=2.0),
+            Switch(
+                "switch1",
+                latency_ns=70.0,
+                bandwidth_gbps=32.0,
+                stt_ns=4.0,
+                parent="switch0",
+            ),
+        ],
+        rc_latency_ns=10.0,
+        rc_bandwidth_gbps=128.0,
+        rc_stt_ns=0.5,
+    )
+
+
+def two_tier_topology(
+    cxl_latency_ns: float = 170.0,
+    cxl_bandwidth_gbps: float = 32.0,
+    cxl_capacity_gib: float = 512.0,
+) -> Topology:
+    """Simple two-tier topology: local DRAM + one direct CXL expander."""
+    return Topology(
+        pools=[
+            Pool("local_dram", 88.9, 76.8, int(96 * 2**30), is_local=True),
+            Pool(
+                "cxl_pool",
+                cxl_latency_ns,
+                cxl_bandwidth_gbps,
+                int(cxl_capacity_gib * 2**30),
+                parent="sw",
+            ),
+        ],
+        switches=[Switch("sw", latency_ns=70.0, bandwidth_gbps=cxl_bandwidth_gbps, stt_ns=2.0)],
+    )

@@ -1,0 +1,168 @@
+"""The Tracer (paper §3, component 1), adapted to JAX.
+
+The paper traces (a) allocations via eBPF and (b) memory events via PEBS.
+Neither exists on TPU, so the tracer is re-thought around what the JAX stack
+gives us exactly:
+
+  * **structural trace** — models describe each step as a list of
+    :class:`Phase` objects (one per layer/sub-block) with logical
+    :class:`Access` records (which region, how many bytes, read or write).
+    This is the pool-attribution source, playing the role of the eBPF
+    address-range map.
+  * **HLO calibration** — ``compiled.cost_analysis()`` gives the exact FLOPs
+    and bytes the compiled step moves; the structural trace is scaled so its
+    totals match the compiled artifact (fusion changes totals; calibration
+    absorbs that).
+  * **collective extraction** — collective bytes are parsed from the
+    compiled HLO text (see :mod:`repro.core.roofline`) and can be modelled as
+    traffic through "ICI switch" components of a topology.
+
+Event batching: a logical access of B bytes at granule g becomes
+``min(ceil(B/g), max_events)`` events carrying equal byte shares.  Aggregate
+bytes are exact; only the event count is coalesced, which is the same fidelity
+trade PEBS sampling makes (documented in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .events import MemEvents, RegionMap, concat_events
+
+__all__ = [
+    "Access",
+    "Phase",
+    "HardwareModel",
+    "TPU_V5E",
+    "synthesize_step_trace",
+    "phase_duration_ns",
+    "hlo_cost_summary",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Access:
+    """One logical tensor access inside a phase."""
+
+    region: str
+    bytes_: float
+    is_write: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    """One schedulable unit of a step (a layer, a collective, an update)."""
+
+    name: str
+    flops: float
+    accesses: Tuple[Access, ...]
+
+    def total_bytes(self) -> float:
+        return sum(a.bytes_ for a in self.accesses)
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """Roofline constants used to pace issue times (and by §Roofline)."""
+
+    name: str
+    peak_flops: float  # FLOP/s (bf16 for TPU)
+    hbm_gbps: float  # bytes/ns == GB/s
+    ici_gbps: float  # per-link ICI bandwidth
+
+    def phase_ns(self, flops: float, bytes_: float) -> float:
+        """Roofline-paced duration: max of compute time and memory time."""
+        t_c = flops / self.peak_flops * 1e9
+        t_m = bytes_ / self.hbm_gbps  # GB/s == bytes/ns
+        return max(t_c, t_m, 1.0)
+
+
+TPU_V5E = HardwareModel(
+    name="tpu_v5e", peak_flops=197e12, hbm_gbps=819.0, ici_gbps=50.0
+)
+
+
+def phase_duration_ns(phase: Phase, hw: HardwareModel) -> float:
+    return hw.phase_ns(phase.flops, phase.total_bytes())
+
+
+def synthesize_step_trace(
+    phases: Sequence[Phase],
+    regions: RegionMap,
+    hw: HardwareModel = TPU_V5E,
+    granularity_bytes: float = 64.0,
+    max_events_per_access: int = 64,
+    calibration: float = 1.0,
+    epoch_mode: str = "step",
+) -> Tuple[List[MemEvents], List[float], List[str]]:
+    """Expand a phase list into per-epoch event traces.
+
+    Returns ``(traces, native_ns, epoch_names)``; in ``'step'`` mode there is
+    one epoch covering all phases, in ``'layer'`` mode one epoch per phase.
+    ``calibration`` scales every byte count (from HLO calibration).
+    """
+    if epoch_mode not in ("step", "layer"):
+        raise ValueError(epoch_mode)
+    per_phase: List[MemEvents] = []
+    durations: List[float] = []
+    t_cursor = 0.0
+    for ph in phases:
+        dur = phase_duration_ns(ph, hw)
+        parts: List[MemEvents] = []
+        for a in ph.accesses:
+            if a.region not in regions:
+                raise KeyError(f"phase {ph.name}: unknown region {a.region!r}")
+            r = regions[a.region]
+            b = a.bytes_ * calibration
+            n_ev = int(min(max(np.ceil(b / granularity_bytes), 1), max_events_per_access))
+            share = b / n_ev
+            # deterministic uniform spread across the phase (no RNG: traces
+            # must be reproducible for regression tests)
+            offs = (np.arange(n_ev, dtype=np.float64) + 0.5) / n_ev * dur
+            base = 0.0 if epoch_mode == "layer" else t_cursor
+            parts.append(
+                MemEvents(
+                    t_ns=base + offs,
+                    pool=np.full((n_ev,), r.pool, np.int32),
+                    bytes_=np.full((n_ev,), share, np.float64),
+                    is_write=np.full((n_ev,), a.is_write, bool),
+                    region=np.full((n_ev,), r.rid, np.int32),
+                )
+            )
+        per_phase.append(concat_events(parts))
+        durations.append(dur)
+        t_cursor += dur
+
+    if epoch_mode == "layer":
+        return per_phase, durations, [ph.name for ph in phases]
+    return (
+        [concat_events(per_phase)],
+        [float(sum(durations))],
+        ["step"],
+    )
+
+
+# --------------------------------------------------------------------------- #
+# HLO calibration helpers
+# --------------------------------------------------------------------------- #
+
+
+def hlo_cost_summary(compiled) -> Dict[str, float]:
+    """Extract FLOPs / bytes-accessed from a compiled step."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", ca.get("bytes_accessed", 0.0)))
+    return {"flops": flops, "bytes_accessed": bytes_accessed}
+
+
+def calibration_factor(structural_bytes: float, compiled_bytes: float) -> float:
+    """Scale factor applied to structural traces so totals match the HLO."""
+    if structural_bytes <= 0:
+        return 1.0
+    return compiled_bytes / structural_bytes

@@ -1,0 +1,48 @@
+"""Collective-overlap helpers.
+
+Under GSPMD the collectives are compiler-inserted, so "overlap" is expressed
+structurally: bucketing gradients so reduce-scatter can start before the full
+backward finishes, and sharding constraints that keep partial results resident
+where the next op wants them.  These helpers are used by the trainer and by
+the §Perf hillclimb.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["constrain", "bucketed", "psum_scatter_tree"]
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint that tolerates running outside a mesh."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def bucketed(tree, bucket_bytes: int = 64 << 20) -> List[List[Any]]:
+    """Group leaves into ~bucket_bytes buckets (gradient-bucketing order)."""
+    leaves = jax.tree.leaves(tree)
+    buckets: List[List[Any]] = [[]]
+    size = 0
+    for l in leaves:
+        b = l.size * l.dtype.itemsize
+        if size + b > bucket_bytes and buckets[-1]:
+            buckets.append([])
+            size = 0
+        buckets[-1].append(l)
+        size += b
+    return buckets
+
+
+def psum_scatter_tree(tree, axis_name: str):
+    """shard_map-side helper: reduce-scatter every leaf over ``axis_name``."""
+    return jax.tree.map(
+        lambda g: jax.lax.psum_scatter(g, axis_name, tiled=True), tree
+    )

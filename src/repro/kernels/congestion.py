@@ -1,0 +1,111 @@
+"""Pallas TPU kernel for the congestion serial-queue scan (paper §3, delay 2).
+
+The Timing Analyzer's hot loop is, per switch, the FIFO queue
+``out_i = max(arr_i, out_{i-1} + STT)`` over the time-sorted events that
+traverse the switch.  The closed form
+
+    out_i = cummax(arr_i − STT·rank_i) + STT·rank_i,   rank = cumsum(mask) − 1
+
+turns it into two prefix scans (a cumsum over the mask and a cummax over the
+shifted arrivals), which map onto the TPU VPU as log₂(B) lane-shift/max steps
+per block plus a scalar carry between sequential grid steps.
+
+TPU adaptation notes (vs the paper's sequential C++ loop):
+  * events live in HBM as (1, N) f32 rows; each grid step pulls a (1, B)
+    tile into VMEM (BlockSpec below), B = 2048 lanes;
+  * prefix scans are done with jnp.cumsum / lax.cummax inside the block —
+    XLA lowers them to log-depth vector ops on the 8×128 VPU;
+  * the inter-block carry (running max f and running rank) is kept in an
+    SMEM scratch, exploiting the fact that the TPU grid is executed
+    sequentially — this is the idiomatic TPU replacement for the GPU-style
+    decoupled-lookback scan.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["congestion_scan", "DEFAULT_BLOCK"]
+
+DEFAULT_BLOCK = 2048
+_NEG = -1e30  # sentinel "minus infinity" safely inside f32
+
+
+def _kernel(t_ref, m_ref, stt_ref, out_ref, delay_ref, carry_ref):
+    """One (1, B) block of the masked serial-queue scan.
+
+    carry_ref (SMEM, f32[2]): [0] = running max of g over prior blocks,
+                              [1] = number of masked events in prior blocks.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[0] = _NEG
+        carry_ref[1] = 0.0
+
+    t = t_ref[0, :]
+    m = m_ref[0, :]
+    stt = stt_ref[0]
+    mf = m.astype(t.dtype)
+
+    rank_local = jnp.cumsum(mf) - 1.0  # inclusive cumsum − 1
+    rank = rank_local + carry_ref[1]
+    g = jnp.where(m, t - stt * rank, _NEG)
+    f_local = jax.lax.cummax(g)
+    f = jnp.maximum(f_local, carry_ref[0])
+    start = jnp.where(m, f + stt * rank, t)
+
+    out_ref[0, :] = start
+    delay_ref[0, :] = jnp.where(m, start - t, 0.0)
+
+    carry_ref[0] = jnp.maximum(carry_ref[0], f_local[-1])
+    carry_ref[1] = carry_ref[1] + jnp.sum(mf)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def congestion_scan(
+    t_sorted: jnp.ndarray,  # [N] f32, time-sorted arrivals
+    mask: jnp.ndarray,  # [N] bool, events traversing this switch
+    stt,  # scalar f32
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+):
+    """Returns ``(start_times[N], delays[N])`` for one switch's queue."""
+    n = t_sorted.shape[0]
+    if n % block != 0:
+        pad = block - n % block
+        t_sorted = jnp.pad(t_sorted, (0, pad), constant_values=jnp.finfo(t_sorted.dtype).max / 8)
+        mask = jnp.pad(mask, (0, pad))
+    npad = t_sorted.shape[0]
+    grid = npad // block
+
+    t2 = t_sorted.reshape(1, npad)
+    m2 = mask.reshape(1, npad)
+    stt_arr = jnp.asarray([stt], t_sorted.dtype)
+
+    out, delay = pl.pallas_call(
+        _kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (0, i)),  # t tile in VMEM
+            pl.BlockSpec((1, block), lambda i: (0, i)),  # mask tile
+            pl.BlockSpec(memory_space=pl.ANY),  # stt scalar
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, npad), t_sorted.dtype),
+            jax.ShapeDtypeStruct((1, npad), t_sorted.dtype),
+        ],
+        scratch_shapes=[pltpu.SMEM((2,), t_sorted.dtype)],
+        interpret=interpret,
+    )(t2, m2, stt_arr)
+    return out[0, :n], delay[0, :n]

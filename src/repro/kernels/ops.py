@@ -1,0 +1,126 @@
+"""Jit'd public wrappers for the Pallas kernels with implementation dispatch.
+
+Three implementations per op:
+
+  * ``'pallas'``           — compiled TPU kernel (the production path),
+  * ``'pallas_interpret'`` — same kernel body executed by the Pallas
+                             interpreter (CPU-correctness path; used by tests),
+  * ``'ref'``              — pure-jnp oracle (GSPMD-partitionable; used by the
+                             multi-pod dry-run, since Pallas TPU kernels do
+                             not lower on the CPU host platform).
+
+Default: ``'pallas'`` when a TPU is present, else ``'ref'``.  Override
+globally with :func:`set_implementation` or per-call with ``impl=``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .congestion import congestion_scan as _congestion_pallas
+from .flash_attention import flash_attention as _flash_pallas
+from .ssd_scan import ssd_scan as _ssd_pallas
+
+__all__ = [
+    "attention",
+    "congestion_queue",
+    "get_implementation",
+    "set_implementation",
+    "ssd",
+]
+
+_IMPL: Optional[str] = None
+_VALID = ("pallas", "pallas_interpret", "ref")
+
+
+def _default_impl() -> str:
+    try:
+        platform = jax.devices()[0].platform
+    except RuntimeError:
+        platform = "cpu"
+    return "pallas" if platform == "tpu" else "ref"
+
+
+def get_implementation() -> str:
+    global _IMPL
+    if _IMPL is None:
+        _IMPL = _default_impl()
+    return _IMPL
+
+
+def set_implementation(impl: str) -> None:
+    if impl not in _VALID:
+        raise ValueError(f"impl must be one of {_VALID}")
+    global _IMPL
+    _IMPL = impl
+
+
+def _resolve(impl: Optional[str]) -> str:
+    if impl is not None:
+        if impl not in _VALID:
+            raise ValueError(f"impl must be one of {_VALID}")
+        return impl
+    return get_implementation()
+
+
+# --------------------------------------------------------------------------- #
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_offset=0,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    impl: Optional[str] = None,
+    block_q: int = 256,
+    block_k: int = 512,
+) -> jnp.ndarray:
+    """GQA attention: q [B,H,Sq,D] × kv [B,Hk,Sk,D] -> [B,H,Sq,D]."""
+    i = _resolve(impl)
+    if i == "ref":
+        return ref.mha_attention(q, k, v, causal=causal, scale=scale, q_offset=q_offset)
+    return _flash_pallas(
+        q, k, v,
+        q_offset=q_offset, causal=causal, scale=scale,
+        block_q=block_q, block_k=block_k,
+        interpret=(i == "pallas_interpret"),
+    )
+
+
+def ssd(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    Bm: jnp.ndarray,
+    Cm: jnp.ndarray,
+    chunk: int = 128,
+    impl: Optional[str] = None,
+) -> jnp.ndarray:
+    """Mamba2 SSD mixer: x [B,L,H,P] -> y [B,L,H,P]."""
+    i = _resolve(impl)
+    if i == "ref":
+        return ref.ssd_chunked(x, dt, A, Bm, Cm, chunk=min(chunk, x.shape[1]))
+    return _ssd_pallas(x, dt, A, Bm, Cm, chunk=chunk, interpret=(i == "pallas_interpret"))
+
+
+def congestion_queue(
+    t_sorted: jnp.ndarray,
+    mask: jnp.ndarray,
+    stt,
+    impl: Optional[str] = None,
+    block: int = 2048,
+):
+    """Serial-queue scan for one switch; returns (start_times, delays)."""
+    i = _resolve(impl)
+    if i == "ref":
+        start = ref.serial_queue(t_sorted, mask, stt)
+        return start, jnp.where(mask, start - t_sorted, 0.0)
+    return _congestion_pallas(
+        t_sorted, mask, stt, block=block, interpret=(i == "pallas_interpret")
+    )

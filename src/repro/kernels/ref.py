@@ -1,0 +1,190 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the semantics the kernels must match bit-for-bit (up to fp
+accumulation order).  Tests sweep shapes/dtypes and assert_allclose against
+these functions with the kernels run in interpret mode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["serial_queue", "mha_attention", "ssd_naive", "ssd_chunked"]
+
+
+# --------------------------------------------------------------------------- #
+# congestion kernel oracle
+# --------------------------------------------------------------------------- #
+
+
+def serial_queue(t_sorted: jnp.ndarray, mask: jnp.ndarray, stt) -> jnp.ndarray:
+    """Start times of a FIFO queue with constant service time over the masked
+    subsequence of a time-sorted event stream; unmasked events pass through.
+
+    out_i = max(arr_i, out_{i-1} + stt) over masked events, closed form
+    out_i = cummax(arr_i − stt·rank_i) + stt·rank_i.
+    """
+    f32 = t_sorted.dtype
+    stt = jnp.asarray(stt, f32)
+    big = jnp.asarray(jnp.finfo(f32).max / 4, f32)
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    rankf = rank.astype(f32)
+    g = jnp.where(mask, t_sorted - stt * rankf, -big)
+    f = jax.lax.cummax(g)
+    return jnp.where(mask, f + stt * rankf, t_sorted)
+
+
+# --------------------------------------------------------------------------- #
+# flash-attention oracle
+# --------------------------------------------------------------------------- #
+
+
+def mha_attention(
+    q: jnp.ndarray,  # [B, H, Sq, D]
+    k: jnp.ndarray,  # [B, Hk, Sk, D]
+    v: jnp.ndarray,  # [B, Hk, Sk, D]
+    causal: bool = True,
+    scale: float | None = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Full-matrix GQA attention in f32 (the flash kernel oracle).
+
+    ``q_offset``: absolute position of q[0] (for decode: Sq=1, offset=cache
+    length) so causality is computed on absolute positions.
+    """
+    B, H, Sq, D = q.shape
+    Hk = k.shape[1]
+    assert H % Hk == 0
+    g = H // Hk
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) * scale
+    if causal:
+        Sk = k.shape[2]
+        qpos = jnp.arange(Sq) + q_offset
+        kpos = jnp.arange(Sk)
+        mask = qpos[:, None] >= kpos[None, :]
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Mamba2 SSD oracles
+# --------------------------------------------------------------------------- #
+
+
+def ssd_naive(
+    x: jnp.ndarray,  # [B, L, H, P]   (P = head dim)
+    dt: jnp.ndarray,  # [B, L, H]      (softplus-activated step)
+    A: jnp.ndarray,  # [H]            (negative; per-head scalar decay rate)
+    Bm: jnp.ndarray,  # [B, L, N]      (input projection onto state, 1 group)
+    Cm: jnp.ndarray,  # [B, L, N]      (state readout, 1 group)
+) -> jnp.ndarray:
+    """Sequential state-space recurrence (the exact semantics):
+
+        h_t = exp(A·dt_t) ⊙ h_{t−1} + dt_t · B_t ⊗ x_t        h ∈ [N, P]
+        y_t = C_t · h_t
+    """
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+
+    def one_head(xh, dth, Ah, Bmh, Cmh):
+        # xh [L,P], dth [L], Bmh/Cmh [L,N]
+        decay = jnp.exp(Ah * dth)  # [L]
+
+        def step(h, inp):
+            xt, dt_t, dec, bt, ct = inp
+            h = dec * h + dt_t * (bt[:, None] * xt[None, :])  # [N,P]
+            y = ct @ h  # [P]
+            return h, y
+
+        h0 = jnp.zeros((N, P), f32)
+        _, ys = jax.lax.scan(step, h0, (xh, dth, decay, Bmh, Cmh))
+        return ys  # [L,P]
+
+    out = jax.vmap(  # over batch
+        jax.vmap(  # over heads
+            one_head, in_axes=(1, 1, 0, None, None), out_axes=1
+        ),
+        in_axes=(0, 0, None, 0, 0),
+        out_axes=0,
+    )(x.astype(f32), dt.astype(f32), A.astype(f32), Bm.astype(f32), Cm.astype(f32))
+    return out.astype(x.dtype)  # [B, L, H, P]
+
+
+def ssd_chunked(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    Bm: jnp.ndarray,
+    Cm: jnp.ndarray,
+    chunk: int = 64,
+) -> jnp.ndarray:
+    """Chunked SSD (state-space duality) — the blocked algorithm the Pallas
+    kernel implements: quadratic attention-like math within chunks, linear
+    state passing between chunks.  Must agree with :func:`ssd_naive`.
+    """
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    assert L % chunk == 0, "sequence must be divisible by chunk"
+    C = L // chunk
+    f32 = jnp.float32
+
+    x_ = x.astype(f32).reshape(Bsz, C, chunk, H, P)
+    dt_ = dt.astype(f32).reshape(Bsz, C, chunk, H)
+    B_ = Bm.astype(f32).reshape(Bsz, C, chunk, N)
+    C_ = Cm.astype(f32).reshape(Bsz, C, chunk, N)
+    A_ = A.astype(f32)
+
+    # per-position log decay a_t = A·dt_t ; cumulative within chunk
+    a = A_[None, None, None, :] * dt_[..., :]  # [B,C,c,H]
+    acum = jnp.cumsum(a, axis=2)  # inclusive cumsum within chunk
+
+    # ---- intra-chunk (quadratic, like masked attention) ------------------- #
+    # y_intra[t] = Σ_{s≤t} C_t·B_s dt_s exp(acum_t − acum_s) x_s
+    seg = acum[:, :, :, None, :] - acum[:, :, None, :, :]  # [B,C,t,s,H]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    seg = jnp.where(tri[None, None, :, :, None], seg, -jnp.inf)
+    G = jnp.einsum("bctn,bcsn->bcts", C_, B_)  # [B,C,t,s]
+    W = G[..., None] * jnp.exp(seg) * dt_[:, :, None, :, :]  # [B,C,t,s,H]
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", W, x_)
+
+    # ---- chunk states ------------------------------------------------------ #
+    # state_c = Σ_s B_s dt_s exp(acum_last − acum_s) x_s   ∈ [N,P]
+    decay_to_end = jnp.exp(acum[:, :, -1:, :] - acum)  # [B,C,c,H]
+    S = jnp.einsum(
+        "bcsn,bcsh,bcshp->bchnp", B_, dt_ * decay_to_end, x_
+    )  # [B,C,H,N,P]
+    chunk_decay = jnp.exp(acum[:, :, -1, :])  # [B,C,H]
+
+    # ---- inter-chunk scan --------------------------------------------------- #
+    def scan_fn(h, inp):
+        S_c, dec_c = inp  # [B,H,N,P], [B,H]
+        h_out = h  # state BEFORE this chunk
+        h = dec_c[..., None, None] * h + S_c
+        return h, h_out
+
+    h0 = jnp.zeros((Bsz, H, N, P), f32)
+    _, h_prev = jax.lax.scan(
+        scan_fn,
+        h0,
+        (jnp.moveaxis(S, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # [B,C,H,N,P] state entering chunk
+
+    # ---- inter-chunk contribution ------------------------------------------ #
+    # y_inter[t] = C_t · (exp(acum_t) ⊙ h_prev)
+    y_inter = jnp.einsum(
+        "bctn,bcth,bchnp->bcthp", C_, jnp.exp(acum), h_prev
+    )
+
+    y = (y_intra + y_inter).reshape(Bsz, L, H, P)
+    return y.astype(x.dtype)

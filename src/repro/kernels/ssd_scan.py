@@ -1,0 +1,112 @@
+"""Pallas TPU kernel for the Mamba2 SSD (state-space duality) scan.
+
+The SSD algorithm (Dao & Gu, 2024) splits the linear recurrence
+
+    h_t = exp(A·dt_t)·h_{t−1} + dt_t·B_t⊗x_t ,   y_t = C_t·h_t
+
+into chunks: *within* a chunk the contribution is an attention-like
+quadratic form (two MXU matmuls), *between* chunks only the [N, P] state is
+passed.  That maps perfectly onto a sequential TPU grid:
+
+  grid = (B, H, n_chunks), chunk axis innermost; the running state lives in
+  a VMEM scratch across grid steps (the TPU grid is sequential, so no
+  cross-block synchronization is needed — the idiomatic TPU replacement for
+  the GPU kernel's inter-block state relay through HBM).
+
+Tiling (chunk=128, N=128, P=64, f32): x/out tiles 32 KiB, B/C tiles 64 KiB,
+W matrix 64 KiB, state 32 KiB — well under VMEM, MXU-aligned on the
+(chunk × N) and (chunk × chunk) matmuls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan"]
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, out_ref, h_ref, *, chunk):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # [c, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # [c]
+    A = a_ref[0]  # scalar (per-head)
+    Bm = b_ref[0, :, :].astype(jnp.float32)  # [c, N]
+    Cm = c_ref[0, :, :].astype(jnp.float32)  # [c, N]
+
+    a = A * dt  # [c] log-decay per step
+    acum = jnp.cumsum(a)  # [c]
+
+    # ---- intra-chunk quadratic part ---------------------------------- #
+    seg = acum[:, None] - acum[None, :]  # [c, c]
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    )
+    decay_mat = jnp.where(tri, jnp.exp(seg), 0.0)
+    G = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [c, c] = C·Bᵀ
+    W = G * decay_mat * dt[None, :]
+    y = jax.lax.dot_general(
+        W, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [c, P]
+
+    # ---- inter-chunk contribution from carried state ------------------ #
+    h = h_ref[...]  # [N, P]
+    y += jnp.exp(acum)[:, None] * jax.lax.dot_general(
+        Cm, h, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # ---- state update -------------------------------------------------- #
+    last = acum[-1]
+    w_in = dt * jnp.exp(last - acum)  # [c]
+    h_ref[...] = jnp.exp(last) * h + jax.lax.dot_general(
+        Bm * w_in[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    out_ref[0, :, 0, :] = y.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jnp.ndarray,  # [B, L, H, P]
+    dt: jnp.ndarray,  # [B, L, H]  (already softplus-activated)
+    A: jnp.ndarray,  # [H]        (negative per-head decay rate)
+    Bm: jnp.ndarray,  # [B, L, N]
+    Cm: jnp.ndarray,  # [B, L, N]
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, L)
+    assert L % chunk == 0, "L must be divisible by chunk"
+    C = L // chunk
+
+    kernel = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, C),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, L, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)

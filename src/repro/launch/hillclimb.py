@@ -1,0 +1,143 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""§Perf hillclimb driver: run named variants of a dry-run cell and compare
+their roofline terms.
+
+Each variant = {strategy | compress_grads | any ModelConfig field overrides}.
+Results append to benchmarks/hillclimb_results.json; EXPERIMENTS.md §Perf
+narrates the hypothesis → change → before/after → verdict log.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --cell granite-moe-3b-a800m:train_4k \
+        --variant baseline --variant compress_grads
+"""
+
+import argparse
+import dataclasses
+import json
+from typing import Any, Dict, Optional
+
+import jax.numpy as jnp
+
+import repro.configs as cfgs
+from repro.launch.dryrun import run_cell, strategy_for
+from repro.launch.mesh import make_production_mesh
+
+OUT = "benchmarks/hillclimb_results.json"
+
+# named variants: (strategy_override, compress_grads, cfg field overrides)
+VARIANTS: Dict[str, Dict[str, Any]] = {
+    "baseline": {},
+    "fsdp": {"strategy": "fsdp_tp"},
+    "dp": {"strategy": "dp_tp"},
+    "compress_grads": {"compress_grads": True},
+    "cast_bf16": {"cfg": {"cast_params_at_step": True}},
+    "cast_bf16+compress": {"compress_grads": True, "cfg": {"cast_params_at_step": True}},
+    "remat_dots": {"cfg": {"remat_policy_name": "dots"}},
+    "no_remat": {"cfg": {"remat": False}},
+    "moe_dense_dispatch": {"cfg": {"moe_dispatch": "dense"}},
+    "moe_dp": {"strategy": "fsdp_tp+moe_dp"},
+    "gqa_fix": {"strategy_suffix": "+gqa_fix"},
+    "gqa_fix+cast": {"strategy_suffix": "+gqa_fix", "cfg": {"cast_params_at_step": True}},
+    "gqa_fix+cast+compress": {"strategy_suffix": "+gqa_fix", "compress_grads": True,
+                              "cfg": {"cast_params_at_step": True}},
+    "moe_dp+gqa_fix+cast": {"strategy": "fsdp_tp+moe_dp+gqa_fix",
+                            "cfg": {"cast_params_at_step": True}},
+    "dp+gqa_fix+cast": {"strategy": "dp_tp+gqa_fix", "cfg": {"cast_params_at_step": True}},
+    "moe_dp+cast": {"strategy": "fsdp_tp+moe_dp", "cfg": {"cast_params_at_step": True}},
+    "moe_groups_8k": {"cfg": {"moe_group_tokens": 8192}},
+    "moe_groups_2k": {"cfg": {"moe_group_tokens": 2048}},
+    "moe_cap_1.0": {"cfg": {"capacity_factor": 1.0}},
+    "kv_f8": {"cfg": {"cache_dtype": jnp.float8_e4m3fn}},
+    "kv_bf16": {"cfg": {"cache_dtype": jnp.bfloat16}},
+    "attn_blocks_2k": {"cfg": {"attn_block_q": 2048, "attn_block_k": 2048}},
+    "ssm_chunk_256": {"cfg": {"ssm_chunk": 256}},
+    "pad_vocab": {"cfg": {"pad_vocab_to_multiple": 16}},
+    "moe_dp+pad_vocab": {"strategy": "fsdp_tp+moe_dp", "cfg": {"pad_vocab_to_multiple": 16}},
+    "moe_dp_dp+pad_vocab": {"strategy": "dp_tp+moe_dp", "cfg": {"pad_vocab_to_multiple": 16}},
+    "moe_dp+pad+cap1+g2k": {"strategy": "fsdp_tp+moe_dp",
+        "cfg": {"pad_vocab_to_multiple": 16, "capacity_factor": 1.0, "moe_group_tokens": 2048}},
+    "gqa_fix+pad_vocab": {"strategy_suffix": "+gqa_fix", "cfg": {"pad_vocab_to_multiple": 16}},
+    "best_granite": {"strategy": "dp_tp+moe_dp",
+        "cfg": {"pad_vocab_to_multiple": 16, "moe_dispatch": "scatter"}},
+    "best_granite+cap1": {"strategy": "dp_tp+moe_dp",
+        "cfg": {"pad_vocab_to_multiple": 16, "moe_dispatch": "scatter", "capacity_factor": 1.0}},
+    "scatter": {"cfg": {"moe_dispatch": "scatter"}},
+    "zero3_gather": {"strategy": "fsdp_tp", "cfg": {"fsdp_gather_at_layer": True}},
+    "zero3_gather+dots": {"strategy": "fsdp_tp",
+        "cfg": {"fsdp_gather_at_layer": True, "remat_policy_name": "dots"}},
+    "ep_data": {"strategy": "fsdp_tp+ep_data"},
+    "ep_data_dp": {"strategy": "dp_tp+ep_data"},
+    "no_remat_fsdp": {"strategy": "fsdp_tp", "cfg": {"remat": False}},
+    "llama4_best": {"strategy": "fsdp_tp",
+        "cfg": {"remat": False, "moe_group_tokens": 2048}},
+    "granite_best": {"strategy": "dp_tp+moe_dp",
+        "cfg": {"pad_vocab_to_multiple": 16, "remat": False}},
+}
+
+
+def run_variant(arch: str, shape: str, vname: str, mesh, mesh_name: str) -> Dict:
+    spec = VARIANTS[vname]
+    cfg = cfgs.get_config(arch, shape)
+    if spec.get("cfg"):
+        cfg = dataclasses.replace(cfg, **spec["cfg"])
+    strategy = spec.get("strategy")
+    if spec.get("strategy_suffix"):
+        strategy = strategy_for(arch, strategy) + spec["strategy_suffix"]
+    rec = run_cell(
+        arch, shape, mesh, mesh_name,
+        strategy=strategy,
+        compress_grads=spec.get("compress_grads", False),
+        cfg_override=cfg,
+    )
+    rec["variant"] = vname
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variant", action="append", required=True)
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    mesh_name = "1pod_16x16" if args.mesh == "single" else "2pod_2x16x16"
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for vname in args.variant:
+        print(f"[hillclimb] {arch} × {shape} × {vname} ...", flush=True)
+        try:
+            rec = run_variant(arch, shape, vname, mesh, mesh_name)
+            r = rec["roofline"]
+            print(
+                f"  compute={r['compute_s']:.4f} memory={r['memory_s']:.4f} "
+                f"collective={r['collective_s']:.4f} dominant={r['dominant']} "
+                f"bound={r['bound_s']:.4f} frac={r['roofline_fraction']:.4f}",
+                flush=True,
+            )
+        except Exception as e:
+            import traceback
+
+            rec = {
+                "arch": arch, "shape": shape, "mesh": mesh_name, "variant": vname,
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-1500:],
+            }
+            print(f"  FAIL {rec['error']}", flush=True)
+        results.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

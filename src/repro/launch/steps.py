@@ -1,0 +1,102 @@
+"""Step-function builders shared by the trainer, server, and dry-run."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model, ModelConfig
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compression import ef_compress, init_error_state
+
+__all__ = [
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+    "abstract_train_state",
+]
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    compress_grads: bool = False,
+    block_specs=None,
+):
+    """train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With ``compress_grads`` the gradient tree passes through int8
+    error-feedback quantization before the optimizer (the DP all-reduce then
+    moves int8); the error residual rides inside opt_state['ef'].
+    """
+    model = Model(cfg)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            if cfg.cast_params_at_step:
+                p = jax.tree.map(
+                    lambda x: x.astype(cfg.dtype) if x.ndim >= 2 else x, p
+                )
+            return model.loss(p, batch, block_specs=block_specs)
+
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        if compress_grads:
+            grads, new_err = ef_compress(grads, opt_state["ef"])
+        new_params, new_inner, om = adamw_update(
+            params, grads, opt_state["adam"], opt_cfg
+        )
+        new_opt = {"adam": new_inner}
+        if compress_grads:
+            new_opt["ef"] = new_err
+        else:
+            new_opt["ef"] = opt_state["ef"]
+        metrics = {"loss": loss, **parts, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def abstract_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig, compress_grads: bool = False):
+    """ShapeDtypeStruct pytrees for (params, opt_state) — no allocation."""
+    model = Model(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    adam = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params)
+    ef = jax.eval_shape(lambda p: init_error_state(p), params) if compress_grads else {}
+    return params, {"adam": adam, "ef": ef}
+
+
+def _maybe_cast(cfg, params):
+    if cfg.cast_params_at_step:
+        return jax.tree.map(
+            lambda x: x.astype(cfg.dtype) if x.ndim >= 2 else x, params
+        )
+    return params
+
+
+def make_prefill_step(cfg: ModelConfig, pad_to: Optional[int] = None):
+    model = Model(cfg)
+
+    def prefill_step(params, batch):
+        params = _maybe_cast(cfg, params)
+        inp = batch["tokens"] if cfg.embed_inputs else batch["embeds"]
+        logits, caches, cache_len = model.prefill(params, inp, pad_to=pad_to)
+        return logits, caches, cache_len
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    model = Model(cfg)
+
+    def decode_step(params, state):
+        params = _maybe_cast(cfg, params)
+        tok = state["token"] if cfg.embed_inputs else state["embed"]
+        logits, new_caches = model.decode_step(
+            params, state["caches"], tok, state["cache_len"]
+        )
+        return logits, new_caches, state["cache_len"] + 1
+
+    return decode_step

@@ -1,0 +1,145 @@
+"""Real training driver (CPU-scale; the same code path the pods would run).
+
+Composes: model zoo + AdamW + synthetic pipeline + checkpoint manager +
+CXLMemSim attach.  Used by ``examples/train_100m.py`` and the integration
+tests; on real hardware the only change is the mesh and the device count.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
+        --steps 20 --batch 8 --seq 128
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfgs
+from repro.checkpoint.manager import CheckpointManager, FaultToleranceConfig
+from repro.core import (
+    CXLMemSim,
+    ClassMapPolicy,
+    EpochSchedule,
+    LocalOnlyPolicy,
+    RegionMap,
+    two_tier_topology,
+)
+from repro.data.pipeline import SyntheticPipeline
+from repro.launch.steps import make_train_step
+from repro.models import Model, ModelConfig
+from repro.models.phases import build_regions_and_phases
+from repro.optim.adamw import AdamWConfig, adamw_init
+
+__all__ = ["train_loop", "main"]
+
+
+def train_loop(
+    cfg: ModelConfig,
+    steps: int = 20,
+    batch: int = 8,
+    seq: int = 128,
+    lr: float = 3e-4,
+    ckpt_dir: Optional[str] = None,
+    ckpt_interval: int = 10,
+    simulate: bool = False,
+    topology=None,
+    policy=None,
+    seed: int = 0,
+    log_every: int = 5,
+) -> Dict[str, Any]:
+    opt_cfg = AdamWConfig(lr=lr, total_steps=max(steps, 2), warmup_steps=max(steps // 10, 1))
+    model = Model(cfg)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+
+    manager = None
+    start_step = 0
+    if ckpt_dir:
+        manager = CheckpointManager(
+            FaultToleranceConfig(directory=ckpt_dir, interval_steps=ckpt_interval)
+        )
+
+        def init_fn():
+            params = model.init(jax.random.PRNGKey(seed))
+            return {"params": params, "opt": {"adam": adamw_init(params, opt_cfg), "ef": {}}}
+
+        state, start_step = manager.resume_or_init(init_fn)
+        params, opt_state = state["params"], state["opt"]
+    else:
+        params = model.init(jax.random.PRNGKey(seed))
+        opt_state = {"adam": adamw_init(params, opt_cfg), "ef": {}}
+
+    pipe = SyntheticPipeline(cfg, batch, seq, seed=seed)
+
+    attached = None
+    if simulate:
+        topology = topology or two_tier_topology()
+        policy = policy or ClassMapPolicy({"opt_state": "cxl_pool"})
+        regions, phases = build_regions_and_phases(cfg, "train", batch, seq)
+        sim = CXLMemSim(topology, policy, epoch=EpochSchedule("step"), check_capacity=False)
+        attached = sim.attach(step_fn, phases, regions)
+
+    losses = []
+    t0 = time.time()
+    for step in range(start_step, steps):
+        batch_data = pipe.device_batch(step)
+        ts = time.time()
+        if attached is not None:
+            params, opt_state, metrics = attached.step(params, opt_state, batch_data)
+        else:
+            params, opt_state, metrics = step_fn(params, opt_state, batch_data)
+        jax.block_until_ready(metrics["loss"])
+        dur = time.time() - ts
+        losses.append(float(metrics["loss"]))
+        if manager is not None:
+            manager.observe_step(step, dur)
+            manager.maybe_save(
+                step, {"params": params, "opt": opt_state}
+            )
+        if log_every and step % log_every == 0:
+            print(
+                f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                f"lr {float(metrics['lr']):.2e} gnorm {float(metrics['grad_norm']):.2f} "
+                f"({dur:.2f}s)",
+                flush=True,
+            )
+    out = {
+        "losses": losses,
+        "steps": steps - start_step,
+        "wall_s": time.time() - t0,
+        "final_loss": losses[-1] if losses else float("nan"),
+        "start_step": start_step,
+    }
+    if attached is not None:
+        out["sim"] = attached.report.summary()
+    if manager is not None:
+        out["stragglers"] = manager.straggler_events
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--simulate", action="store_true", help="attach CXLMemSim")
+    args = ap.parse_args()
+    cfg = cfgs.get_smoke(args.arch) if args.smoke else cfgs.get_config(args.arch)
+    cfg = dataclasses.replace(cfg, dtype=jnp.float32)  # CPU-friendly
+    out = train_loop(
+        cfg, steps=args.steps, batch=args.batch, seq=args.seq, lr=args.lr,
+        ckpt_dir=args.ckpt_dir, simulate=args.simulate,
+    )
+    print({k: v for k, v in out.items() if k != "losses"})
+
+
+if __name__ == "__main__":
+    main()

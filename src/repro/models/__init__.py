@@ -1,0 +1,5 @@
+"""Model zoo: every assigned architecture as a ModelConfig + pure step fns."""
+
+from .model import Model, ModelConfig
+
+__all__ = ["Model", "ModelConfig"]

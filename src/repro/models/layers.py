@@ -1,0 +1,82 @@
+"""Shared building blocks: norms, initializers, MLPs.
+
+Pure functions over parameter pytrees (dicts of jnp arrays) — no framework.
+Initializers take an explicit PRNG key and return f32 params; the training
+dtype (bf16 compute) is handled by callers casting activations.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_mlp",
+    "gated_mlp",
+    "init_dense_mlp",
+    "init_gated_mlp",
+    "init_linear",
+    "rms_norm",
+    "layer_norm",
+]
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_linear(key, d_in: int, d_out: int, scale: Optional[float] = None) -> jnp.ndarray:
+    """Truncated-normal fan-in init (the LLaMA/PaLM convention)."""
+    if scale is None:
+        scale = d_in ** -0.5
+    return jax.random.truncated_normal(key, -3, 3, (d_in, d_out), jnp.float32) * scale
+
+
+def rms_norm(x: jnp.ndarray, gain: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * gain).astype(dt)
+
+
+def layer_norm(
+    x: jnp.ndarray, gain: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * gain + bias).astype(dt)
+
+
+# --------------------------------------------------------------------------- #
+# MLPs
+# --------------------------------------------------------------------------- #
+
+
+def init_gated_mlp(key, d_model: int, d_ff: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": init_linear(k1, d_model, d_ff),  # gate proj
+        "wu": init_linear(k2, d_model, d_ff),  # up proj
+        "wo": init_linear(k3, d_ff, d_model, scale=d_ff ** -0.5),
+    }
+
+
+def gated_mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU: (silu(x·wi) ⊙ x·wu)·wo — the LLaMA-family MLP."""
+    h = jax.nn.silu(x @ p["wi"].astype(x.dtype)) * (x @ p["wu"].astype(x.dtype))
+    return h @ p["wo"].astype(x.dtype)
+
+
+def init_dense_mlp(key, d_model: int, d_ff: int) -> Params:
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "wi": init_linear(k1, d_model, d_ff),
+        "wo": init_linear(k2, d_ff, d_model, scale=d_ff ** -0.5),
+    }
+
+
+def dense_mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """GELU MLP — used by the encoder-only (HuBERT) family."""
+    return jax.nn.gelu(x @ p["wi"].astype(x.dtype)) @ p["wo"].astype(x.dtype)

@@ -1,0 +1,63 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+int8 symmetric quantization with **error feedback** (residual carried to the
+next step), the standard trick to cut DP collective bytes 4× with negligible
+quality loss at LLM scale.  Compression happens *before* the pmean so the
+all-reduce moves int8; decompression after.
+
+Under GSPMD we express this as quantize -> psum-of-int32 -> dequantize inside
+the step; the compiled HLO's all-reduce operand is then 8/32-bit instead of
+f32, which shows up directly in the §Roofline collective term.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_tree", "decompress_tree", "init_error_state", "ef_compress"]
+
+
+def _quant(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(tree) -> Dict[str, Any]:
+    qs = jax.tree.map(lambda g: _quant(g.astype(jnp.float32)), tree, is_leaf=None)
+    return {
+        "q": jax.tree.map(lambda t: t[0], qs, is_leaf=lambda x: isinstance(x, tuple)),
+        "scale": jax.tree.map(lambda t: t[1], qs, is_leaf=lambda x: isinstance(x, tuple)),
+    }
+
+
+def decompress_tree(packed: Dict[str, Any]):
+    return jax.tree.map(_dequant, packed["q"], packed["scale"])
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress(grads, err_state):
+    """Error-feedback compression: returns (dequantized grads, new residual).
+
+    g' = Q(g + e);  e' = (g + e) - g'
+    """
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        q, s = _quant(x)
+        deq = _dequant(q, s)
+        return deq.astype(g.dtype), x - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(err_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return tdef.unflatten([o[0] for o in out]), tdef.unflatten([o[1] for o in out])

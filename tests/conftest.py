@@ -1,0 +1,13 @@
+import os
+
+# Tests must see the single real CPU device — never the 512-device dry-run
+# configuration (the brief forbids setting that flag globally).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

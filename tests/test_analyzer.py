@@ -1,0 +1,168 @@
+"""Timing-analyzer correctness: ref vs JAX vs fine-grained DES + properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.analyzer import (
+    EpochAnalyzer,
+    FineGrainedSimulator,
+    analyze_ref,
+    serial_queue_ref,
+)
+from repro.core.events import MemEvents, synthetic_trace
+from repro.core.topology import Pool, Switch, Topology, figure1_topology, two_tier_topology
+
+FLAT = figure1_topology().flatten()
+
+
+def _trace(n=2000, seed=0, burst=0.5, epoch=1e6):
+    return synthetic_trace(n, FLAT.n_pools, epoch_ns=epoch, seed=seed, burstiness=burst)
+
+
+# --------------------------------------------------------------------------- #
+# agreement across implementations
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("seed,burst", [(0, 0.0), (1, 0.5), (2, 0.9)])
+def test_ref_matches_fine_grained_congestion(seed, burst):
+    """Epoch analyzer's congestion == event-by-event DES (stt service mode)."""
+    ev = _trace(seed=seed, burst=burst)
+    ref = analyze_ref(FLAT, ev)
+    des = FineGrainedSimulator(FLAT, bandwidth_mode="stt").simulate(ev)
+    assert ref.latency_ns == pytest.approx(des.latency_ns, rel=1e-9)
+    assert ref.congestion_ns == pytest.approx(des.congestion_ns, rel=1e-6)
+    np.testing.assert_allclose(
+        ref.per_switch_congestion_ns, des.per_switch_congestion_ns, rtol=1e-6
+    )
+
+
+@pytest.mark.parametrize("impl", ["inline", "pallas_interpret"])
+def test_jax_analyzer_matches_ref(impl):
+    ev = _trace(seed=3, burst=0.7)
+    ref = analyze_ref(FLAT, ev)
+    got = EpochAnalyzer(FLAT, impl=impl).analyze(ev)
+    assert got.latency_ns == pytest.approx(ref.latency_ns, rel=1e-4)
+    assert got.congestion_ns == pytest.approx(ref.congestion_ns, rel=1e-3)
+    # windowed bandwidth uses the same window count => close agreement
+    assert got.bandwidth_ns == pytest.approx(ref.bandwidth_ns, rel=1e-2, abs=1.0)
+
+
+def test_epoch_analyzer_bucketing_consistency():
+    """Padding to a bigger bucket must not change results."""
+    an = EpochAnalyzer(FLAT)
+    ev = _trace(n=100)
+    a = an.analyze(ev)
+    b = an.analyze(ev)  # cached-compile second call
+    assert a.total_ns == pytest.approx(b.total_ns)
+
+
+def test_empty_trace():
+    a = analyze_ref(FLAT, MemEvents.empty())
+    assert a.total_ns == 0.0
+    b = EpochAnalyzer(FLAT).analyze(MemEvents.empty())
+    assert b.total_ns == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# semantic properties (paper §3 definitions)
+# --------------------------------------------------------------------------- #
+
+
+def test_local_only_traffic_has_no_delay():
+    ev = synthetic_trace(500, 1, epoch_ns=1e5, seed=0)  # all pool 0
+    a = analyze_ref(FLAT, ev)
+    assert a.total_ns == 0.0
+
+
+def test_latency_delay_formula():
+    """latency = Σ (pool_latency − local_latency) per event (paper §3)."""
+    ev = MemEvents.build([10.0, 20.0, 30.0], [1, 2, 0], [64, 64, 64])
+    a = analyze_ref(FLAT, ev)
+    want = (FLAT.pool_latency_ns[1] - FLAT.local_latency_ns) + (
+        FLAT.pool_latency_ns[2] - FLAT.local_latency_ns
+    )
+    assert a.latency_ns == pytest.approx(want)
+
+
+def test_congestion_pushes_events_apart():
+    """Two simultaneous events through one switch: second waits STT."""
+    ev = MemEvents.build([100.0, 100.0], [1, 1], [64, 64])
+    a = analyze_ref(FLAT, ev)
+    # switch0 stt=2.0, RC stt=0.5: second event waits 2.0 at sw0; at the RC
+    # arrivals are then 100.0 and 102.0 — already >0.5 apart, no extra wait
+    assert a.congestion_ns == pytest.approx(2.0)
+
+
+def test_bandwidth_delay_on_saturation():
+    """Traffic over BW×window must stretch the window."""
+    topo = two_tier_topology(cxl_bandwidth_gbps=1.0)  # 1 byte/ns
+    flat = topo.flatten()
+    # 100 events × 1 MB in ~1 us: 100 MB over a 1 byte/ns link ~ 1e8 ns needed
+    ev = MemEvents.build(
+        np.linspace(0, 1000.0, 100), [1] * 100, [1e6] * 100
+    )
+    a = analyze_ref(flat, ev)
+    assert a.bandwidth_ns > 1e7  # must charge roughly bytes/bw
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    seed=st.integers(0, 10_000),
+    burst=st.floats(0.0, 0.95),
+)
+def test_property_delays_nonnegative_and_monotone(n, seed, burst):
+    ev = synthetic_trace(n, FLAT.n_pools, epoch_ns=1e5, seed=seed, burstiness=burst)
+    a = analyze_ref(FLAT, ev)
+    assert a.latency_ns >= 0 and a.congestion_ns >= 0 and a.bandwidth_ns >= 0
+    # doubling every event's bytes can only increase bandwidth delay
+    ev2 = MemEvents(ev.t_ns, ev.pool, ev.bytes_ * 2, ev.is_write, ev.region)
+    b = analyze_ref(FLAT, ev2)
+    assert b.bandwidth_ns >= a.bandwidth_ns - 1e-9
+    # latency delay is independent of bytes
+    assert b.latency_ns == pytest.approx(a.latency_ns)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), stt=st.floats(0.1, 50.0))
+def test_property_serial_queue_invariants(seed, stt):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 400))
+    arr = np.sort(rng.uniform(0, 1e4, n))
+    out = serial_queue_ref(arr, stt)
+    # never early, FIFO order preserved, spacing >= stt
+    assert (out >= arr - 1e-9).all()
+    assert (np.diff(out) >= stt - 1e-6).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_higher_latency_pool_costs_more(seed):
+    base = two_tier_topology(cxl_latency_ns=150.0)
+    slow = two_tier_topology(cxl_latency_ns=400.0)
+    ev = synthetic_trace(200, 2, epoch_ns=1e5, seed=seed)
+    a = analyze_ref(base.flatten(), ev)
+    b = analyze_ref(slow.flatten(), ev)
+    assert b.latency_ns >= a.latency_ns
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_event_order_permutation_invariant(seed):
+    """Latency/bandwidth totals don't depend on trace array order."""
+    ev = synthetic_trace(300, FLAT.n_pools, epoch_ns=1e5, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    perm = rng.permutation(ev.n)
+    a = analyze_ref(FLAT, ev)
+    b = analyze_ref(FLAT, ev.take(perm))
+    assert b.latency_ns == pytest.approx(a.latency_ns)
+    assert b.congestion_ns == pytest.approx(a.congestion_ns, rel=1e-9)
+
+
+def test_sampling_preserves_aggregate_bytes():
+    ev = _trace(n=5000, seed=5)
+    s = ev.sample(0.25, seed=1)
+    assert s.n < ev.n
+    assert s.total_bytes == pytest.approx(ev.total_bytes, rel=0.1)

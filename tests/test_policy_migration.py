@@ -1,0 +1,182 @@
+"""Placement policies, migration, coherency — the paper's research surfaces."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CACHELINE_BYTES,
+    PAGE_BYTES,
+    ClassMapPolicy,
+    CoherencyConfig,
+    CoherencyModel,
+    HotnessTieredPolicy,
+    InterleavePolicy,
+    LocalOnlyPolicy,
+    MemEvents,
+    MigrationConfig,
+    MigrationSimulator,
+    RegionMap,
+    capacity_check,
+    figure1_topology,
+)
+
+FLAT = figure1_topology().flatten()
+
+
+def _regions():
+    r = RegionMap()
+    r.alloc("w", 1 << 20, "param")
+    r.alloc("opt", 1 << 22, "opt_state")
+    r.alloc("kv", 1 << 21, "kvcache")
+    r.alloc("act", 1 << 18, "activation")
+    return r
+
+
+def test_local_only():
+    r = _regions()
+    LocalOnlyPolicy().place(r, FLAT)
+    assert all(reg.pool == 0 for reg in r)
+
+
+def test_class_map_routes_classes():
+    r = _regions()
+    ClassMapPolicy({"opt_state": "cxl_pool2", "kvcache": "cxl_pool1"}).place(r, FLAT)
+    assert r["opt"].pool == FLAT.pool_names.index("cxl_pool2")
+    assert r["kv"].pool == FLAT.pool_names.index("cxl_pool1")
+    assert r["w"].pool == 0 and r["act"].pool == 0
+
+
+def test_interleave_spreads_bytes():
+    r = RegionMap()
+    for i in range(16):
+        r.alloc(f"r{i}", 1 << 20, "param")
+    InterleavePolicy(["cxl_pool2", "cxl_pool3"], classes=["param"]).place(r, FLAT)
+    per_pool = r.bytes_per_pool(FLAT.n_pools)
+    assert per_pool[2] > 0 and per_pool[3] > 0
+    assert abs(per_pool[2] - per_pool[3]) <= (1 << 20)
+
+
+def test_hotness_tiered_respects_budget():
+    r = _regions()
+    hot = {"w": 1000.0, "kv": 500.0, "opt": 1.0, "act": 2000.0}
+    HotnessTieredPolicy(
+        "cxl_pool1", hotness=hot, local_budget_bytes=(1 << 20) + (1 << 18) + 100
+    ).place(r, FLAT)
+    # hottest-per-byte fit local: act then w; opt/kv spill to cxl
+    assert r["act"].pool == 0 and r["w"].pool == 0
+    assert r["opt"].pool != 0 and r["kv"].pool != 0
+
+
+def test_capacity_check_raises_on_overflow():
+    r = RegionMap()
+    r.alloc("huge", int(FLAT.pool_capacity[1]) + 1, "param", pool=1)
+    r.alloc("local", 1, "param", pool=0)
+    with pytest.raises(ValueError):
+        capacity_check(r, FLAT)
+
+
+def test_granularity_names():
+    assert "cacheline" in ClassMapPolicy({}, CACHELINE_BYTES).describe()
+    assert "page" in ClassMapPolicy({}, PAGE_BYTES).describe()
+
+
+# --------------------------------------------------------------------------- #
+# migration
+# --------------------------------------------------------------------------- #
+
+
+def _trace_for(region_id: int, n: int, pool: int) -> MemEvents:
+    return MemEvents.build(
+        np.linspace(0, 1e5, n), [pool] * n, [64.0] * n, region=[region_id] * n
+    )
+
+
+def test_migration_promotes_hot_region():
+    r = RegionMap()
+    reg = r.alloc("hot", 1 << 20, "kvcache", pool=1)
+    sim = MigrationSimulator(
+        MigrationConfig(mode="software", promote_threshold=10, local_budget_bytes=1 << 30),
+        r,
+        FLAT,
+    )
+    tr = _trace_for(reg.rid, 200, pool=1)
+    # epoch 1: hotness builds; promotion happens at boundary
+    sim.observe_and_migrate(tr)
+    assert r["hot"].pool == 0
+    assert sim.promotions == 1
+    assert sim.moved_bytes_total == reg.nbytes
+
+
+def test_migration_demotes_cold_region():
+    r = RegionMap()
+    reg = r.alloc("cold", 1 << 20, "kvcache", pool=1)
+    reg.pool = 0  # currently resident local, home pool 1
+    sim = MigrationSimulator(
+        MigrationConfig(mode="software", demote_threshold=5.0), r, FLAT
+    )
+    sim._home_pool[reg.rid] = 1
+    tr = _trace_for(reg.rid, 1, pool=0)  # nearly no accesses
+    sim.observe_and_migrate(tr)
+    assert r["cold"].pool == 1
+    assert sim.demotions == 1
+
+
+def test_hardware_migration_remaps_within_epoch():
+    r = RegionMap()
+    reg = r.alloc("hot", 1 << 12, "kvcache", pool=1)
+    sim = MigrationSimulator(
+        MigrationConfig(
+            mode="hardware", promote_threshold=1, reaction_ns=5e4,
+            local_budget_bytes=1 << 30, granularity_bytes=CACHELINE_BYTES,
+        ),
+        r,
+        FLAT,
+    )
+    tr = _trace_for(reg.rid, 100, pool=1)
+    remapped, mig = sim.observe_and_migrate(tr)
+    # events after reaction point moved to local pool 0
+    after = remapped.t_ns >= 5e4
+    assert (remapped.pool[after] == 0).all()
+    assert (remapped.pool[~after] == 1).all()
+    assert mig.n > 0
+
+
+def test_migration_off_is_identity():
+    r = RegionMap()
+    reg = r.alloc("x", 1 << 12, "kvcache", pool=1)
+    sim = MigrationSimulator(MigrationConfig(mode="off"), r, FLAT)
+    tr = _trace_for(reg.rid, 10, pool=1)
+    remapped, mig = sim.observe_and_migrate(tr)
+    assert mig.n == 0
+    np.testing.assert_array_equal(remapped.pool, tr.pool)
+
+
+# --------------------------------------------------------------------------- #
+# coherency
+# --------------------------------------------------------------------------- #
+
+
+def test_coherency_charges_writes_to_shared_pools():
+    r = RegionMap()
+    reg = r.alloc("shared_kv", 1 << 20, "kvcache", pool=1)
+    model = CoherencyModel(CoherencyConfig(n_hosts=4), r)
+    n = 100
+    tr = MemEvents.build(
+        np.linspace(0, 1e5, n), [1] * n, [64.0] * n,
+        is_write=[True] * (n // 2) + [False] * (n // 2),
+        region=[reg.rid] * n,
+    )
+    bi, extra = model.epoch_traffic(tr)
+    assert bi.n > 0
+    # 50 writes × 3 sharers × 64B of BI traffic
+    assert bi.bytes_.sum() == pytest.approx(50 * 3 * 64.0)
+    assert extra > 0
+
+
+def test_coherency_single_host_silent():
+    r = RegionMap()
+    reg = r.alloc("kv", 1 << 20, "kvcache", pool=1)
+    model = CoherencyModel(CoherencyConfig(n_hosts=1), r)
+    tr = _trace_for(reg.rid, 10, pool=1)
+    bi, extra = model.epoch_traffic(tr)
+    assert bi.n == 0 and extra == 0.0

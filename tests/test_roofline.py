@@ -1,0 +1,67 @@
+"""HLO collective parsing + roofline-term math."""
+
+import pytest
+
+from repro.core.roofline import (
+    DTYPE_BYTES,
+    collective_bytes_from_hlo,
+    roofline_terms,
+)
+
+HLO = """
+ENTRY %main {
+  %p0 = bf16[1024,512]{1,0} parameter(0)
+  %ar = bf16[1024,512]{1,0} all-reduce(bf16[1024,512]{1,0} %p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[2048,128]{1,0} all-gather(f32[512,128]{1,0} %p1), replica_groups=[2,4]<=[8], dimensions={0}
+  %rs = f32[256,128]{1,0} reduce-scatter(f32[1024,128]{1,0} %p2), replica_groups=[2,4]<=[8], to_apply=%add
+  %a2a = bf16[64,64]{1,0} all-to-all(bf16[64,64]{1,0} %p3), replica_groups={{0,1}}
+  %cp = f32[32]{0} collective-permute(f32[32]{0} %p4), source_target_pairs={{0,1},{1,0}}
+  %ars = bf16[8,8]{1,0} all-reduce-start(bf16[8,8]{1,0} %p5), replica_groups={{0,1,2,3,4,5,6,7}}
+  %solo = f32[999]{0} all-reduce(f32[999]{0} %p6), replica_groups={{0}}
+}
+"""
+
+
+def test_collective_parse_factors():
+    got = collective_bytes_from_hlo(HLO)
+    # all-reduce: 1024·512·2 B × 2·3/4 (+ the -start op: 8·8·2 × 2·7/8)
+    assert got["all-reduce"] == pytest.approx(1024 * 512 * 2 * 1.5 + 8 * 8 * 2 * 1.75)
+    # all-gather: result 2048·128·4 × 3/4
+    assert got["all-gather"] == pytest.approx(2048 * 128 * 4 * 0.75)
+    # reduce-scatter: result 256·128·4 × (g−1) = ×3
+    assert got["reduce-scatter"] == pytest.approx(256 * 128 * 4 * 3)
+    # all-to-all: 64·64·2 × 1/2
+    assert got["all-to-all"] == pytest.approx(64 * 64 * 2 * 0.5)
+    # collective-permute: result bytes
+    assert got["collective-permute"] == pytest.approx(32 * 4)
+    # group of size 1 moves nothing
+    assert got["n_all-reduce"] == 3
+    assert got["total"] == pytest.approx(
+        got["all-reduce"] + got["all-gather"] + got["reduce-scatter"]
+        + got["all-to-all"] + got["collective-permute"]
+    )
+
+
+def test_roofline_terms_math():
+    t = roofline_terms(
+        hlo_flops=197e12,  # exactly 1 second of compute
+        hlo_bytes=819e9,  # exactly 1 second of HBM
+        collective_bytes=25e9,  # 0.5 s of ICI
+        model_flops=98.5e12,  # half the HLO flops are "useful"
+        n_chips=256,
+    )
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.collective_s == pytest.approx(0.5)
+    assert t.dominant in ("compute", "memory")
+    assert t.useful_flops_ratio == pytest.approx(0.5)
+    assert t.bound_s == pytest.approx(1.0)
+    # ideal time = model_flops/peak = 0.5 s; bound = 1 s -> fraction 0.5
+    assert t.roofline_fraction == pytest.approx(0.5)
+
+
+def test_dtype_bytes_table():
+    assert DTYPE_BYTES["bf16"] == 2 and DTYPE_BYTES["f32"] == 4
+    # unknown dtypes are skipped, not crashed
+    got = collective_bytes_from_hlo("%x = token[] all-reduce(token[] %y), replica_groups={{0,1}}")
+    assert got["total"] == 0.0

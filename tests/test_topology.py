@@ -1,0 +1,84 @@
+import numpy as np
+import pytest
+
+from repro.core.topology import (
+    FlatTopology,
+    Pool,
+    Switch,
+    Topology,
+    figure1_topology,
+    local_only_topology,
+    two_tier_topology,
+)
+
+
+def test_figure1_structure():
+    t = figure1_topology()
+    flat = t.flatten()
+    assert flat.n_pools == 4
+    assert flat.n_switches == 3  # 2 switches + RC
+    # local pool traverses nothing
+    assert flat.route[0].sum() == 0
+    # pool1 -> switch0 + RC
+    assert flat.route[1, 0] == 1 and flat.route[1, 2] == 1 and flat.route[1, 1] == 0
+    # pool2/3 -> switch1 + switch0 + RC
+    for p in (2, 3):
+        assert flat.route[p].sum() == 3
+
+
+def test_total_latency_accumulates_along_path():
+    t = figure1_topology()
+    p2 = t.pools[2]
+    want = 180.0 + 70.0 + 70.0 + 10.0  # media + sw1 + sw0 + RC
+    assert t.pool_total_latency_ns(p2) == pytest.approx(want)
+
+
+def test_bottleneck_bandwidth():
+    t = figure1_topology()
+    assert t.pool_path_bandwidth_gbps(t.pools[2]) == 32.0
+    assert t.pool_path_bandwidth_gbps(t.pools[0]) == 76.8
+
+
+def test_stage_order_deepest_first():
+    flat = figure1_topology().flatten()
+    order = list(flat.stage_order())
+    # switch1 (depth 2) before switch0 (depth 1) before RC (depth 0)
+    assert order.index(1) < order.index(0) < order.index(2)
+
+
+def test_validation_rejects_bad_topologies():
+    with pytest.raises(ValueError):  # no local pool
+        Topology(pools=[Pool("a", 100, 10, 1 << 30, parent=None)])
+    with pytest.raises(ValueError):  # two local pools
+        Topology(
+            pools=[
+                Pool("a", 100, 10, 1 << 30, is_local=True),
+                Pool("b", 100, 10, 1 << 30, is_local=True),
+            ]
+        )
+    with pytest.raises(ValueError):  # unknown parent
+        Topology(
+            pools=[
+                Pool("local", 88, 76, 1 << 30, is_local=True),
+                Pool("x", 100, 10, 1 << 30, parent="nope"),
+            ]
+        )
+    with pytest.raises(ValueError):  # cycle
+        Topology(
+            pools=[Pool("local", 88, 76, 1 << 30, is_local=True)],
+            switches=[
+                Switch("s1", 10, 10, 1, parent="s2"),
+                Switch("s2", 10, 10, 1, parent="s1"),
+            ],
+        )
+
+
+def test_local_only_has_zero_route():
+    flat = local_only_topology().flatten()
+    assert flat.route.sum() == 0
+
+
+def test_describe_mentions_every_component():
+    t = two_tier_topology()
+    d = t.describe()
+    assert "cxl_pool" in d and "local_dram" in d and "sw" in d
