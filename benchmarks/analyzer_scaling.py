@@ -1,0 +1,218 @@
+"""Fused/batched analyzer scaling sweep -> BENCH_analyzer.json perf record.
+
+Sweeps event count x switch depth x batch size across analyzer
+implementations and writes a machine-readable record so future PRs can
+track the trajectory of the hot path:
+
+  * ``seed``           — the pre-fusion per-epoch path (``fused=False``:
+                         one argsort + scatter per switch stage per epoch,
+                         one dispatch + host sync per epoch),
+  * ``fused``          — fused single-sort cascade, still one epoch per
+                         dispatch,
+  * ``fused_batched``  — fused cascade + ``analyze_batch`` ([B, N] stacked
+                         epochs, one dispatch, on-device accumulation),
+  * ``fused_pallas``   — the multi-stage Pallas kernel via the interpreter
+                         (CPU correctness path; compiled speed needs a TPU),
+                         small sizes only.
+
+Topologies: a ``depth``-switch chain with the remote pools behind the
+deepest switch (the analyzer's static merge plan needs zero inter-stage
+merges) and, at the acceptance point, the branching Figure-1 topology
+(one merge per epoch) for an honest worst-ish case.
+
+Every timed config is also checked against ``analyze_ref`` run with the
+same effective window length, recording the relative error.
+
+Acceptance gate (ISSUE 1): fused_batched >= 5x seed at N=65536, depth 3,
+with <= 1e-3 relative error vs the oracle.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.analyzer import EpochAnalyzer, analyze_ref
+from repro.core.events import synthetic_trace
+from repro.core.topology import FlatTopology, Pool, Switch, Topology, figure1_topology
+
+BURSTINESS = 0.5
+
+
+def chain_topology(depth: int) -> Topology:
+    switches = [
+        Switch(f"sw{d}", 70.0, 64.0 - 8.0 * d, 2.0 + d, parent=f"sw{d-1}" if d else None)
+        for d in range(depth)
+    ]
+    return Topology(
+        pools=[
+            Pool("local", 88.9, 76.8, 1 << 36, is_local=True),
+            Pool("far1", 180.0, 32.0, 1 << 38, parent=f"sw{depth-1}"),
+            Pool("far2", 200.0, 32.0, 1 << 38, parent=f"sw{depth-1}"),
+        ],
+        switches=switches,
+    )
+
+
+def _oracle_rel_err(an: EpochAnalyzer, flat: FlatTopology, ev) -> float:
+    """Max relative error of the three delay totals vs analyze_ref, with the
+    oracle run at the analyzer's effective window length."""
+    got = an.analyze(ev)
+    span = max(float(ev.t_ns.max()) + 1.0, an.bw_window_ns)
+    ref = analyze_ref(flat, ev, bw_window_ns=max(span / an.n_windows, 1.0))
+    errs = []
+    for g, r in (
+        (got.latency_ns, ref.latency_ns),
+        (got.congestion_ns, ref.congestion_ns),
+        (got.bandwidth_ns, ref.bandwidth_ns),
+    ):
+        if abs(r) > 1e-6:
+            errs.append(abs(g - r) / abs(r))
+    return max(errs) if errs else 0.0
+
+
+def _time_per_epoch(fn, reps: int) -> float:
+    fn()  # warm-up / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(
+    sizes=(4096, 16384, 65536),
+    depths=(1, 2, 3),
+    batches=(1, 8, 32),
+    pallas_max_events: int = 4096,
+) -> List[Dict]:
+    rows: List[Dict] = []
+    for depth in depths:
+        topo = chain_topology(depth)
+        flat = topo.flatten()
+        for n in sizes:
+            traces = [
+                synthetic_trace(n, flat.n_pools, epoch_ns=1e6, seed=i, burstiness=BURSTINESS)
+                for i in range(max(batches))
+            ]
+            reps = 2 if n >= 65536 else 3
+            seed_an = EpochAnalyzer(flat, fused=False)
+            fused_an = EpochAnalyzer(flat)
+            seed_s = _time_per_epoch(lambda: seed_an.analyze(traces[0]), reps)
+            configs = [("seed", seed_an, 1), ("fused", fused_an, 1)]
+            configs += [("fused_batched", fused_an, b) for b in batches if b > 1]
+            if n <= pallas_max_events:
+                configs.append(
+                    ("fused_pallas", EpochAnalyzer(flat, impl="pallas_interpret"), 1)
+                )
+            for name, an, b in configs:
+                if name == "seed":
+                    per_epoch = seed_s
+                elif b == 1:
+                    per_epoch = _time_per_epoch(lambda: an.analyze(traces[0]), reps)
+                else:
+                    per_epoch = (
+                        _time_per_epoch(lambda: an.analyze_batch(traces[:b]), reps) / b
+                    )
+                rows.append(
+                    {
+                        "impl": name,
+                        "topology": f"chain{depth}",
+                        "events": n,
+                        "switch_depth": depth,
+                        "batch": b,
+                        "s_per_epoch": per_epoch,
+                        "events_per_s": n / per_epoch,
+                        "speedup_vs_seed": seed_s / per_epoch,
+                        "oracle_rel_err": _oracle_rel_err(an, flat, traces[0]),
+                    }
+                )
+    # honest non-chain data point: Figure-1 (branching => one merge/epoch)
+    flat = figure1_topology().flatten()
+    n, b = 65536, 8
+    traces = [
+        synthetic_trace(n, flat.n_pools, epoch_ns=1e6, seed=i, burstiness=BURSTINESS)
+        for i in range(b)
+    ]
+    seed_an = EpochAnalyzer(flat, fused=False)
+    fused_an = EpochAnalyzer(flat)
+    seed_s = _time_per_epoch(lambda: seed_an.analyze(traces[0]), 2)
+    fused_s = _time_per_epoch(lambda: fused_an.analyze_batch(traces), 2) / b
+    rows.append(
+        {
+            "impl": "fused_batched",
+            "topology": "figure1",
+            "events": n,
+            "switch_depth": 2,
+            "batch": b,
+            "s_per_epoch": fused_s,
+            "events_per_s": n / fused_s,
+            "speedup_vs_seed": seed_s / fused_s,
+            "oracle_rel_err": _oracle_rel_err(fused_an, flat, traces[0]),
+        }
+    )
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_analyzer.json")
+    ap.add_argument("--quick", action="store_true", help="small sweep (CI smoke)")
+    args = ap.parse_args()
+    # fail on an unwritable record path before the sweep, not after
+    with open(args.out, "a"):
+        pass
+    if args.quick:
+        rows = run(sizes=(4096,), depths=(2,), batches=(1, 4), pallas_max_events=4096)
+    else:
+        rows = run()
+
+    print(f"{'impl':<14} {'topo':<8} {'events':>7} {'batch':>5} "
+          f"{'ms/epoch':>9} {'vs seed':>8} {'rel_err':>9}")
+    for r in rows:
+        print(
+            f"{r['impl']:<14} {r['topology']:<8} {r['events']:>7} {r['batch']:>5} "
+            f"{r['s_per_epoch'] * 1e3:>9.2f} {r['speedup_vs_seed']:>7.1f}x "
+            f"{r['oracle_rel_err']:>9.1e}"
+        )
+
+    gate = [
+        r
+        for r in rows
+        if r["impl"] == "fused_batched"
+        and r["events"] == 65536
+        and r["switch_depth"] == 3
+    ]
+    record = {
+        "bench": "analyzer_scaling",
+        "burstiness": BURSTINESS,
+        "platform": platform.platform(),
+        "rows": rows,
+    }
+    if gate:
+        best = max(gate, key=lambda r: r["speedup_vs_seed"])
+        record["acceptance"] = {
+            "config": "N=65536 depth=3 (chain)",
+            "speedup_vs_seed": best["speedup_vs_seed"],
+            "oracle_rel_err": best["oracle_rel_err"],
+            "pass": bool(
+                best["speedup_vs_seed"] >= 5.0 and best["oracle_rel_err"] <= 1e-3
+            ),
+        }
+        print(
+            f"# acceptance: fused+batched {best['speedup_vs_seed']:.1f}x vs seed, "
+            f"rel_err {best['oracle_rel_err']:.1e} -> "
+            f"{'PASS' if record['acceptance']['pass'] else 'FAIL'}"
+        )
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"# wrote {args.out}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

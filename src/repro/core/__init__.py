@@ -12,12 +12,19 @@ Components (paper Figure 2):
   Roofline -> :mod:`repro.core.roofline`
 """
 
-from .analyzer import DelayBreakdown, EpochAnalyzer, FineGrainedSimulator, analyze_ref
+from .analyzer import (
+    DelayBreakdown,
+    EpochAnalyzer,
+    FineGrainedSimulator,
+    analyze_ref,
+    plan_cascade,
+)
 from .attach import AttachedProgram, CXLMemSim, SimReport
 from .coherency import CoherencyConfig, CoherencyModel
 from .events import (
     CACHELINE_BYTES,
     PAGE_BYTES,
+    EventStager,
     MemEvents,
     Region,
     RegionMap,
@@ -64,6 +71,7 @@ __all__ = [
     "DelayBreakdown",
     "EpochAnalyzer",
     "EpochSchedule",
+    "EventStager",
     "FineGrainedSimulator",
     "FlatTopology",
     "HardwareModel",
@@ -91,6 +99,7 @@ __all__ = [
     "figure1_topology",
     "hlo_cost_summary",
     "local_only_topology",
+    "plan_cascade",
     "roofline_terms",
     "slice_by_quantum",
     "synthetic_trace",

@@ -29,19 +29,52 @@ form with a cumulative max:  let ``f_i = cummax(arr_i − STT·rank_i)``; then
 ``out_i = f_i + STT·rank_i``.  That turns the per-switch queue into a sort +
 scan, which is what makes the epoch analyzer vectorizable (and, in
 :mod:`repro.kernels.congestion`, a Pallas kernel).
+
+The production pipeline (``fused=True``, the default) runs four stages per
+batch of epochs, entirely on device, with a single host round-trip:
+
+  1. **sort** — one stable argsort per epoch (padded entries sort last);
+  2. **fused cascade** — every switch stage's serial queue in one pass
+     (:func:`repro.kernels.ref.serial_queue_cascade` / the multi-stage
+     Pallas kernel).  The array stays physically sorted by *current* time:
+     after each stage the two sorted runs (queued vs untouched events) are
+     re-merged with rank arithmetic, so no further sorts are needed while
+     still matching ``analyze_ref``'s per-stage re-sort exactly;
+  3. **windowed bandwidth** — segment-sums over static window counts on the
+     post-congestion times;
+  4. **device accumulation** — per-epoch breakdowns are summed over the
+     batch on device; only six scalars/small vectors cross the host
+     boundary per ``analyze_batch`` call.
+
+Choosing ``impl``:
+
+  * ``'inline'`` — fused cascade as pure XLA ops; fastest on CPU/GPU, the
+    default, and the recommended production path everywhere.
+  * ``'pallas'`` — the fused multi-stage TPU kernel (one kernel launch per
+    epoch cascade).  Its scan phase follows the proven single-switch kernel,
+    but the inter-stage merge uses in-kernel gather/scatter that has only
+    been validated in interpret mode (this container has no TPU); treat the
+    compiled path as experimental until exercised on TPU hardware.
+  * ``'pallas_interpret'`` — same kernel body via the Pallas interpreter;
+    slow, used by tests/benchmarks to validate the kernel on CPU.
+  * ``'ref'`` (``analyze_ref``) — numpy float64; the oracle, not jitted.
+
+``fused=False`` preserves the pre-fusion per-switch argsort loop; it exists
+as the benchmark baseline (``benchmarks/analyzer_scaling.py``) and as a
+cross-check, not for production use.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .events import MemEvents
+from .events import EventStager, MemEvents
 from .topology import FlatTopology
 
 __all__ = [
@@ -49,6 +82,7 @@ __all__ = [
     "EpochAnalyzer",
     "FineGrainedSimulator",
     "analyze_ref",
+    "plan_cascade",
     "serial_queue_ref",
 ]
 
@@ -184,12 +218,83 @@ def analyze_ref(
 # --------------------------------------------------------------------------- #
 
 
+def plan_cascade(flat: FlatTopology):
+    """Derive the fused cascade's static route bits and merge plan.
+
+    The cascade keeps the event array sorted by current time.  A stage's
+    scan only needs *its own masked events* to appear in non-decreasing
+    order — and a subsequence of a sorted run is sorted.  Simulating the run
+    partition of the array (runs split as stages rewrite their events) tells
+    us, per stage, which previously-independent sorted runs its mask spans;
+    only those need merging, piecewise, before the scan.  Chains (every pool
+    behind the deepest switch) need zero merges; the paper's Figure 1 needs
+    exactly one.  Falls back to the conservative merge-every-stage plan when
+    the needed masks exceed the 31 bits of an int32 route word.
+
+    Returns ``(bits_pool [P] int32, merge_plan | None, stage_order tuple)``
+    where bit ``k`` of an event's route word marks membership in the pool
+    set ``k`` (the first ``S`` bits are the stage masks, in stage order).
+    """
+    route = np.asarray(flat.route)
+    P = flat.n_pools
+    stage_order = tuple(int(s) for s in flat.stage_order())
+    masks = [
+        frozenset(int(p) for p in np.nonzero(route[:, s] > 0)[0]) for s in stage_order
+    ]
+    # pool index P is a pseudo-pool for padded/invalid events: routed nowhere
+    all_ids = frozenset(range(P + 1))
+
+    sets: List[frozenset] = list(masks)  # bit k <-> sets[k]; first S are stages
+
+    def bit_of(pool_set: frozenset) -> int:
+        for k, existing in enumerate(sets):
+            if existing == pool_set:
+                return k
+        sets.append(pool_set)
+        return len(sets) - 1
+
+    runs = [all_ids]
+    plan: List[Tuple[Tuple[int, Optional[int]], ...]] = []
+    for mask in masks:
+        hits = [r & mask for r in runs if r & mask]
+        ops: List[Tuple[int, Optional[int]]] = []
+        if len(hits) > 1:
+            # fold the runs the mask spans into one sorted subsequence; the
+            # local pool and the padding pseudo-pool are never routed, so a
+            # whole-array (within=None) merge can't arise here — it belongs
+            # to the conservative fallback plan only
+            acc = hits[0]
+            for piece in hits[1:]:
+                within = acc | piece
+                ops.append((bit_of(piece), bit_of(within)))
+                acc = within
+            runs = [mask] + [r - mask for r in runs if r - mask]
+        else:
+            runs = [p for r in runs for p in (r & mask, r - mask) if p]
+        plan.append(tuple(ops))
+
+    if len(sets) > 31:  # int32 route word exhausted: conservative plan
+        sets = list(masks)
+        merge_plan = None
+    else:
+        merge_plan = tuple(plan)
+    if len(sets) > 31:
+        raise ValueError(f"{len(sets)} switch stages exceed the 31-bit route word")
+    bits_pool = np.zeros((P,), np.int32)
+    for k, pool_set in enumerate(sets):
+        for p in pool_set:
+            if p < P:
+                bits_pool[p] |= np.int32(1) << k
+    return bits_pool, merge_plan, stage_order
+
+
 def _analyze_jax(
-    t: jnp.ndarray,  # [N] f32 epoch-relative ns (padded entries: +inf)
+    t: jnp.ndarray,  # [N] f32 epoch-relative ns, TIME-SORTED (padded: 0, last)
     pool: jnp.ndarray,  # [N] i32 (padded entries: 0)
     nbytes: jnp.ndarray,  # [N] f32 (padded entries: 0)
     weight: jnp.ndarray,  # [N] f32 statistical multiplicity
     valid: jnp.ndarray,  # [N] bool
+    bits_table: jnp.ndarray,  # [P] i32 per-pool route word (plan_cascade)
     pool_latency_ns: jnp.ndarray,  # [P]
     local_latency_ns: jnp.ndarray,  # []
     route: jnp.ndarray,  # [P, S]
@@ -198,8 +303,15 @@ def _analyze_jax(
     stage_order: Tuple[int, ...],  # static
     n_windows: int,  # static
     bw_window_ns: jnp.ndarray,  # []
-    impl: str = "inline",  # 'inline' | 'pallas' | 'pallas_interpret' | 'ref'
+    impl: str = "inline",  # 'inline' | 'pallas' | 'pallas_interpret'
+    fused: bool = True,  # False: legacy per-stage argsort loop (benchmarks)
+    merge_plan=None,  # static merge schedule from plan_cascade (fused only)
 ):
+    """One epoch's three-delay analysis; the fused path (default) assumes
+    the events were staged time-sorted with padding at the tail (the
+    :class:`~repro.core.events.EventStager` contract — the epoch's one
+    stable sort happens host-side during staging, and only when the trace
+    isn't already sorted)."""
     P = pool_latency_ns.shape[0]
     S = switch_stt_ns.shape[0]
     f32 = t.dtype
@@ -207,42 +319,91 @@ def _analyze_jax(
     # -- latency ----------------------------------------------------------- #
     per_event_lat = jnp.maximum(pool_latency_ns[pool] - local_latency_ns, 0.0) * weight
     per_event_lat = jnp.where(valid, per_event_lat, 0.0)
-    per_pool_lat = jax.ops.segment_sum(per_event_lat, pool, num_segments=P)
+    if fused:
+        # one-hot contraction: XLA CPU scatter-add (segment_sum) costs ~10x
+        # more than an [N, P] einsum at pool counts this small
+        pool_onehot = (pool[:, None] == jnp.arange(P, dtype=pool.dtype)).astype(f32)
+        per_pool_lat = jnp.einsum("n,np->p", per_event_lat, pool_onehot)
+    else:
+        per_pool_lat = jax.ops.segment_sum(per_event_lat, pool, num_segments=P)
     latency = per_event_lat.sum()
 
-    # -- congestion: cascaded masked serial queues ------------------------- #
     big = jnp.asarray(jnp.finfo(f32).max / 4, f32)
     t_cur = jnp.where(valid, t, big)
-    per_switch_cong = [jnp.zeros((), f32)] * S
-    for s in stage_order:
-        stt = switch_stt_ns[s]
-        mask = (route[pool, s] > 0) & valid
-        order = jnp.argsort(t_cur, stable=True)
-        t_sorted = t_cur[order]
-        m_sorted = mask[order]
-        if impl == "inline":
-            rank = jnp.cumsum(m_sorted.astype(jnp.int32)) - 1
-            rankf = rank.astype(f32)
-            g = jnp.where(m_sorted, t_sorted - stt * rankf, -big)
-            f = jax.lax.cummax(g)
-            start = jnp.where(m_sorted, f + stt * rankf, t_sorted)
-            delay = jnp.where(m_sorted, start - t_sorted, 0.0)
+
+    if fused:
+        # -- congestion: fused single-sort cascade -------------------------- #
+        from repro.kernels import ops as kops  # deferred: avoid cycles
+
+        stage_arr = jnp.asarray(stage_order, jnp.int32)
+        ev_bits = jnp.where(valid, bits_table[pool], 0)
+        t_fin, slot_idx, psd = kops.congestion_cascade(
+            t_cur,
+            ev_bits,
+            switch_stt_ns[stage_arr],
+            impl="ref" if impl == "inline" else impl,
+            merge_plan=merge_plan,
+        )
+        per_switch_cong = jnp.zeros((S,), f32).at[stage_arr].set(psd)
+        # the Pallas kernel always runs the conservative merge schedule, so
+        # its slot order never matches input order
+        has_merges = impl != "inline" or merge_plan is None or any(
+            len(ops) for ops in merge_plan
+        )
+        if has_merges:
+            # bandwidth runs in final slot order; gather payloads through
+            # the cascade's permutation (slot k held input event slot_idx[k])
+            lat_e = per_event_lat[slot_idx]
+            pool_e, nbytes_e = pool[slot_idx], nbytes[slot_idx]
+            valid_e = valid[slot_idx]
         else:
-            from repro.kernels import ops as kops  # deferred: avoid cycles
+            # no merges scheduled: slot order == input order, skip gathers
+            lat_e, pool_e, nbytes_e, valid_e = per_event_lat, pool, nbytes, valid
+        congestion = per_switch_cong.sum()
 
-            start, delay = kops.congestion_queue(t_sorted, m_sorted, stt, impl=impl)
-        t_cur = t_cur.at[order].set(jnp.where(m_sorted, start, t_sorted))
-        per_switch_cong[s] = delay.sum()
-    per_switch_cong = jnp.stack(per_switch_cong)
-    congestion = per_switch_cong.sum()
+        # -- bandwidth: one segment-sum over (window, pool), then a tiny
+        #    [W, P] @ [P, S] matmul distributes pools onto switches --------- #
+        t_obs = jnp.where(valid_e, t_fin + lat_e, 0.0)
+        win = jnp.minimum((t_obs / bw_window_ns).astype(jnp.int32), n_windows - 1)
+        win = jnp.where(valid_e, win, n_windows - 1)
+        key = win * P + pool_e
+        wp = jax.ops.segment_sum(
+            jnp.where(valid_e, nbytes_e, 0.0), key, num_segments=n_windows * P
+        ).reshape(n_windows, P)
+        wbytes = wp @ route  # [W, S]
+    else:
+        # -- congestion: legacy per-stage argsort loop (seed baseline) ------ #
+        per_switch_list = [jnp.zeros((), f32)] * S
+        for s in stage_order:
+            stt = switch_stt_ns[s]
+            mask = (route[pool, s] > 0) & valid
+            order = jnp.argsort(t_cur, stable=True)
+            t_sorted = t_cur[order]
+            m_sorted = mask[order]
+            if impl == "inline":
+                rank = jnp.cumsum(m_sorted.astype(jnp.int32)) - 1
+                rankf = rank.astype(f32)
+                g = jnp.where(m_sorted, t_sorted - stt * rankf, -big)
+                f = jax.lax.cummax(g)
+                start = jnp.where(m_sorted, f + stt * rankf, t_sorted)
+                delay = jnp.where(m_sorted, start - t_sorted, 0.0)
+            else:
+                from repro.kernels import ops as kops  # deferred: avoid cycles
 
-    # -- bandwidth: windowed stretch ---------------------------------------- #
-    t_obs = jnp.where(valid, t_cur + per_event_lat, 0.0)
-    win = jnp.minimum((t_obs / bw_window_ns).astype(jnp.int32), n_windows - 1)
-    win = jnp.where(valid, win, n_windows - 1)
-    traversed = route[pool, :] * valid[:, None].astype(f32)  # [N, S]
-    contrib = traversed * nbytes[:, None]  # [N, S]
-    wbytes = jax.ops.segment_sum(contrib, win, num_segments=n_windows)  # [W, S]
+                start, delay = kops.congestion_queue(t_sorted, m_sorted, stt, impl=impl)
+            t_cur = t_cur.at[order].set(jnp.where(m_sorted, start, t_sorted))
+            per_switch_list[s] = delay.sum()
+        per_switch_cong = jnp.stack(per_switch_list)
+        congestion = per_switch_cong.sum()
+
+        # -- bandwidth: windowed stretch (seed formulation) ----------------- #
+        t_obs = jnp.where(valid, t_cur + per_event_lat, 0.0)
+        win = jnp.minimum((t_obs / bw_window_ns).astype(jnp.int32), n_windows - 1)
+        win = jnp.where(valid, win, n_windows - 1)
+        traversed = route[pool, :] * valid[:, None].astype(f32)  # [N, S]
+        contrib = traversed * nbytes[:, None]  # [N, S]
+        wbytes = jax.ops.segment_sum(contrib, win, num_segments=n_windows)  # [W, S]
+
     stretch = jnp.maximum(wbytes / switch_bw[None, :] - bw_window_ns, 0.0)
     per_switch_bw_d = stretch.sum(axis=0)
     bandwidth = per_switch_bw_d.sum()
@@ -250,11 +411,61 @@ def _analyze_jax(
     return latency, congestion, bandwidth, per_pool_lat, per_switch_cong, per_switch_bw_d
 
 
+def _analyze_batch_jax(
+    t: jnp.ndarray,  # [B, N]
+    pool: jnp.ndarray,  # [B, N]
+    nbytes: jnp.ndarray,  # [B, N]
+    weight: jnp.ndarray,  # [B, N]
+    valid: jnp.ndarray,  # [B, N]
+    bw_window_ns: jnp.ndarray,  # [B] per-epoch window length
+    bits_table: jnp.ndarray,  # [P]
+    pool_latency_ns: jnp.ndarray,
+    local_latency_ns: jnp.ndarray,
+    route: jnp.ndarray,
+    switch_stt_ns: jnp.ndarray,
+    switch_bw: jnp.ndarray,
+    stage_order: Tuple[int, ...],
+    n_windows: int,
+    impl: str = "inline",
+    fused: bool = True,
+    merge_plan=None,
+):
+    """B stacked epochs -> breakdown totals, accumulated on device.
+
+    The inline path vmaps the whole per-epoch analysis (one batched
+    cascade); the Pallas kernel runs epochs sequentially inside one traced
+    ``lax.map`` dispatch.  Either way the host sees a single call and a
+    single small transfer per batch.
+    """
+
+    def one(t1, pool1, nbytes1, weight1, valid1, bww1):
+        return _analyze_jax(
+            t1, pool1, nbytes1, weight1, valid1, bits_table,
+            pool_latency_ns, local_latency_ns, route, switch_stt_ns, switch_bw,
+            stage_order=stage_order, n_windows=n_windows, bw_window_ns=bww1,
+            impl=impl, fused=fused, merge_plan=merge_plan,
+        )
+
+    xs = (t, pool, nbytes, weight, valid, bw_window_ns)
+    if impl in ("pallas", "pallas_interpret"):
+        outs = jax.lax.map(lambda args: one(*args), xs)
+    else:
+        outs = jax.vmap(one)(*xs)
+    return jax.tree.map(lambda x: x.sum(axis=0), outs)
+
+
 class EpochAnalyzer:
-    """Jitted epoch analyzer with bucketed padding.
+    """Jitted epoch analyzer with bucketed padding and epoch batching.
 
     Event counts vary per epoch; traces are padded up to the next power-of-two
-    bucket so repeated ``analyze`` calls reuse the compile cache.
+    bucket (via reusable :class:`~repro.core.events.EventStager` buffers, no
+    per-epoch allocation) so repeated calls reuse the compile cache.
+
+    :meth:`analyze_batch` stacks B bucketed epochs into ``[B, N]`` arrays and
+    runs a single jitted, vmapped dispatch whose per-epoch breakdowns are
+    summed **on device** — one host round-trip per batch instead of one per
+    epoch.  :meth:`analyze` is the B=1 special case.  See the module
+    docstring for the pipeline stages and the ``impl`` / ``fused`` knobs.
     """
 
     def __init__(
@@ -264,6 +475,7 @@ class EpochAnalyzer:
         n_windows: int = 128,
         dtype=jnp.float32,
         impl: str = "inline",
+        fused: bool = True,
     ):
         self.flat = flat
         self.bw_window_ns = float(bw_window_ns)
@@ -275,39 +487,45 @@ class EpochAnalyzer:
         self._stt = jnp.asarray(flat.switch_stt_ns, dtype)
         self._bw = jnp.asarray(flat.switch_bandwidth_gbps, dtype)
         self.impl = impl
-        self._stage_order = tuple(int(s) for s in flat.stage_order())
-        self._fn = jax.jit(
-            _analyze_jax, static_argnames=("stage_order", "n_windows", "impl")
+        self.fused = bool(fused)
+        bits_pool, self._merge_plan, self._stage_order = plan_cascade(flat)
+        self._bits_table = jnp.asarray(bits_pool)
+        self._stager = EventStager(np.dtype(jnp.dtype(dtype).name))
+        self._batch_fn = jax.jit(
+            _analyze_batch_jax,
+            static_argnames=("stage_order", "n_windows", "impl", "fused", "merge_plan"),
         )
 
     @staticmethod
-    def _bucket(n: int) -> int:
-        b = 16
+    def _bucket(n: int, floor: int = 16) -> int:
+        b = floor
         while b < n:
             b <<= 1
         return b
 
     def analyze(self, events: MemEvents) -> DelayBreakdown:
+        return self.analyze_batch([events])
+
+    def analyze_batch(self, traces: Sequence[MemEvents]) -> DelayBreakdown:
+        """Analyze B epochs in one device dispatch; returns summed totals."""
         P, S = self.flat.n_pools, self.flat.n_switches
-        if events.n == 0:
+        traces = [tr for tr in traces if tr.n]
+        if not traces:
             return DelayBreakdown.zero(P, S)
-        n = events.n
-        nb = self._bucket(n)
-        pad = nb - n
-        t = np.pad(events.t_ns.astype(np.float64), (0, pad))
-        pool = np.pad(events.pool.astype(np.int32), (0, pad))
-        nbytes = np.pad(events.bytes_.astype(np.float64), (0, pad))
-        weight = np.pad(events.weight.astype(np.float64), (0, pad))
-        valid = np.pad(np.ones((n,), bool), (0, pad))
-        span = max(float(events.t_ns.max()) + 1.0, self.bw_window_ns)
-        # window length chosen so n_windows static windows tile the epoch span
-        bw_window = max(span / self.n_windows, 1.0)
-        out = self._fn(
-            jnp.asarray(t, self.dtype),
-            jnp.asarray(pool),
-            jnp.asarray(nbytes, self.dtype),
-            jnp.asarray(weight, self.dtype),
-            jnp.asarray(valid),
+        n_bucket = self._bucket(max(tr.n for tr in traces))
+        b_bucket = self._bucket(len(traces), floor=1)
+        buf = self._stager.stage(traces, b_bucket, n_bucket)
+        # per-epoch window length: n_windows static windows tile each span
+        span = np.maximum(buf["span"], self.bw_window_ns)
+        bw_window = np.maximum(span / self.n_windows, 1.0)
+        out = self._batch_fn(
+            jnp.asarray(buf["t"]),
+            jnp.asarray(buf["pool"]),
+            jnp.asarray(buf["bytes"]),
+            jnp.asarray(buf["weight"]),
+            jnp.asarray(buf["valid"]),
+            jnp.asarray(bw_window, self.dtype),
+            self._bits_table,
             self._pool_lat,
             self._local_lat,
             self._route,
@@ -315,12 +533,19 @@ class EpochAnalyzer:
             self._bw,
             stage_order=self._stage_order,
             n_windows=self.n_windows,
-            bw_window_ns=jnp.asarray(bw_window, self.dtype),
             impl=self.impl,
+            fused=self.fused,
+            merge_plan=self._merge_plan,
         )
-        lat, cong, bw, ppl, psc, psb = jax.tree.map(np.asarray, out)
+        # the single host-boundary crossing for the whole batch
+        lat, cong, bw, ppl, psc, psb = jax.device_get(out)
         return DelayBreakdown(
-            float(lat), float(cong), float(bw), ppl, psc, psb
+            float(lat),
+            float(cong),
+            float(bw),
+            ppl.astype(np.float64),
+            psc.astype(np.float64),
+            psb.astype(np.float64),
         )
 
 
@@ -368,12 +593,13 @@ class FineGrainedSimulator:
         next_free = np.zeros((S,), np.float64)
         per_switch_cong = np.zeros((S,), np.float64)
         per_switch_bw = np.zeros((S,), np.float64)
-        # priority queue of (time, seq, event_idx, stage_pos)
-        heap: List[Tuple[float, int, int, int]] = []
-        seq = 0
-        for i in range(ev.n):
-            heapq.heappush(heap, (float(ev.t_ns[i]), seq, i, 0))
-            seq += 1
+        # priority queue of (time, seq, event_idx, stage_pos); ``ev`` is
+        # time-sorted, so the seed list already satisfies the heap invariant
+        # — one O(n) pass instead of n heappushes.
+        heap: List[Tuple[float, int, int, int]] = [
+            (float(ev.t_ns[i]), i, i, 0) for i in range(ev.n)
+        ]
+        seq = ev.n
         while heap:
             t_arr, _, i, stage = heapq.heappop(heap)
             path = self._paths[pool[i]]
@@ -388,8 +614,7 @@ class FineGrainedSimulator:
                 service = stt
             start = max(t_arr, next_free[s])
             next_free[s] = start + service
-            wait = start - t_arr
-            per_switch_cong[s] += min(wait, np.inf)  # queueing delay
+            per_switch_cong[s] += start - t_arr  # queueing delay
             if self.bandwidth_mode == "per_txn" and service > stt:
                 per_switch_bw[s] += service - stt
             heapq.heappush(heap, (start + service if self.bandwidth_mode == "per_txn" else start, seq, i, stage + 1))

@@ -2,13 +2,23 @@
 
 Wraps any jitted step function.  Per step:
 
-  1. dispatch the real step and measure native wall time (the paper's
+  1. cut the step's structural trace into epochs (Timer), apply migration
+     remapping and inject coherency traffic (stateful, main thread);
+  2. submit the step's epoch batch to the Timing Analyzer — by default
+     **asynchronously**: a double-buffered submission queue (depth 2) feeds
+     a single worker thread, so the analyzer's device work overlaps the
+     next step's native execution (the paper's low-overhead attach model);
+  3. dispatch the real step and measure native wall time (the paper's
      "execution of the attached program");
-  2. cut the step's structural trace into epochs (Timer);
-  3. per epoch: apply migration remapping, inject coherency traffic, run the
-     Timing Analyzer, accumulate the three delays;
   4. optionally ``time.sleep`` the computed delay — the paper's delay
-     injection, making the host observe simulated-topology speed.
+     injection, making the host observe simulated-topology speed (this
+     forces synchronous analysis: the delay must exist before it can be
+     injected).
+
+All epochs of a step go through :meth:`EpochAnalyzer.analyze_batch` as one
+device dispatch; results cross the host boundary once per step, not once
+per epoch.  Reading :attr:`AttachedProgram.report` flushes any in-flight
+async work first, so observed totals are always consistent.
 
 Two clocks are reported:
 
@@ -16,13 +26,17 @@ Two clocks are reported:
   * ``simulated_s`` — native + Σ delays (what the topology would impose),
 
 plus the per-component delay decomposition, per-pool/switch, per-epoch.
+``analyzer_s`` stays the analyzer's own compute seconds (the paper's
+overhead accounting) whether or not it overlapped native execution.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -100,6 +114,7 @@ class CXLMemSim:
         n_windows: int = 128,
         check_capacity: bool = True,
         max_events_per_access: int = 64,  # trace fidelity (higher = finer)
+        async_analysis: Optional[bool] = None,  # None: auto (see below)
     ):
         self.topology = topology
         self.flat = topology.flatten()
@@ -114,6 +129,12 @@ class CXLMemSim:
         self.n_windows = n_windows
         self.check_capacity = check_capacity
         self.max_events_per_access = max_events_per_access
+        # async analysis overlaps analyzer work with native execution; delay
+        # injection needs the delay before the step returns, so it forces
+        # the synchronous path
+        if async_analysis is None:
+            async_analysis = analyzer == "epoch" and not inject_delays
+        self.async_analysis = bool(async_analysis) and not inject_delays
 
     def attach(
         self,
@@ -126,6 +147,79 @@ class CXLMemSim:
         if self.check_capacity:
             capacity_check(regions, self.flat)
         return AttachedProgram(self, step_fn, list(phases), regions, calibration)
+
+
+class _AnalysisPipeline:
+    """Double-buffered async analysis: a depth-2 submission queue feeds one
+    worker thread.  ``submit`` blocks only when two step batches are already
+    in flight (backpressure), so analyzer device work overlaps the attached
+    program's native execution.  ``flush`` drains the queue and re-raises
+    the first worker exception (later batches are still analyzed — they are
+    independent — so only the failing batch's epochs are missing from the
+    report, and the raised error announces it).
+
+    The worker holds only a weak reference to its :class:`AttachedProgram`
+    and polls with a timeout, so abandoning a program (without calling
+    ``close``) lets both be garbage-collected instead of leaking one parked
+    thread per ``attach``."""
+
+    _POLL_S = 10.0
+
+    def __init__(self, prog: "AttachedProgram"):
+        import weakref
+
+        self._prog = weakref.ref(prog)
+        self._q: "queue.Queue[Optional[Tuple[List[MemEvents], float]]]" = queue.Queue(
+            maxsize=2
+        )
+        self._error: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._worker, name="cxlmemsim-analyzer", daemon=True
+        )
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            try:
+                item = self._q.get(timeout=self._POLL_S)
+            except queue.Empty:
+                if self._prog() is None:  # owner was garbage-collected
+                    return
+                continue
+            if item is None:
+                self._q.task_done()
+                return
+            try:
+                prog = self._prog()
+                if prog is not None:
+                    prog._analyze_and_accumulate(*item)
+            except BaseException as e:  # first error wins; surfaced on flush()
+                if self._error is None:
+                    self._error = e
+            finally:
+                # drop frame locals before blocking on the next get():
+                # a lingering strong ref here would defeat the weakref
+                prog = item = None
+                self._q.task_done()
+
+    def submit(self, traces: List[MemEvents], coh_ns: float) -> None:
+        if not self._thread.is_alive():
+            raise RuntimeError(
+                "analysis pipeline is closed — step() after close() would "
+                "enqueue work no worker will ever drain"
+            )
+        self._q.put((traces, coh_ns))
+
+    def flush(self) -> None:
+        self._q.join()
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def close(self) -> None:
+        if self._thread.is_alive():
+            self._q.put(None)
+            self._thread.join()
 
 
 class AttachedProgram:
@@ -144,16 +238,35 @@ class AttachedProgram:
         self.calibration = calibration
         if sim.analyzer_kind == "epoch":
             self._analyzer = EpochAnalyzer(sim.flat, n_windows=sim.n_windows)
-            self._analyze = self._analyzer.analyze
         else:
             self._analyzer = FineGrainedSimulator(sim.flat, bandwidth_mode="per_txn")
-            self._analyze = self._analyzer.simulate
-        self.report = SimReport(
+        self._report = SimReport(
             per_pool_latency_ns=np.zeros((sim.flat.n_pools,)),
             per_switch_congestion_ns=np.zeros((sim.flat.n_switches,)),
             per_switch_bandwidth_ns=np.zeros((sim.flat.n_switches,)),
         )
+        self._report_lock = threading.Lock()
         self._trace_cache: Optional[tuple] = None
+        self._pipeline = _AnalysisPipeline(self) if sim.async_analysis else None
+
+    # ------------------------------------------------------------------ #
+
+    @property
+    def report(self) -> SimReport:
+        """The accumulated report; flushes in-flight async analysis first."""
+        self.flush()
+        return self._report
+
+    def flush(self) -> None:
+        """Block until every submitted epoch batch has been analyzed."""
+        if self._pipeline is not None:
+            self._pipeline.flush()
+
+    def close(self) -> None:
+        """Flush and stop the async analysis worker (idempotent)."""
+        if self._pipeline is not None:
+            self._pipeline.flush()
+            self._pipeline.close()
 
     # ------------------------------------------------------------------ #
 
@@ -183,52 +296,89 @@ class AttachedProgram:
             self._trace_cache = (traces, native_ns, names)
         return self._trace_cache
 
-    def step(self, *args, **kwargs):
-        """Run one real step under simulation; returns the step's outputs."""
-        t0 = time.perf_counter()
-        out = self.step_fn(*args, **kwargs)
-        jax.block_until_ready(out)
-        native = time.perf_counter() - t0
-        self.report.native_s += native
-        self.report.steps += 1
+    def _epoch_batch(self) -> Tuple[List[MemEvents], float]:
+        """One step's epoch traces with migration/coherency applied.
 
-        a0 = time.perf_counter()
-        delay_ns = 0.0
+        Stateful transforms run on the submitting thread so their epoch
+        order is deterministic; only the (pure) analysis is offloaded."""
         traces, _, _ = self._traces()
         from .events import concat_events  # local import to avoid cycle
 
+        batch: List[MemEvents] = []
+        coh_ns_total = 0.0
         for tr in traces:
             if self.sim.migration is not None:
                 tr, extra = self.sim.migration.observe_and_migrate(tr)
                 if extra.n:
                     tr = concat_events([tr, extra])
-                self.report.migration_moved_bytes = self.sim.migration.moved_bytes_total
-            coh_ns = 0.0
+                self._report.migration_moved_bytes = self.sim.migration.moved_bytes_total
             if self.sim.coherency is not None:
                 bi, coh_ns = self.sim.coherency.epoch_traffic(tr)
+                coh_ns_total += coh_ns
                 if bi.n:
                     tr = concat_events([tr, bi])
-            bd: DelayBreakdown = self._analyze(tr)
-            self.report.epochs += 1
-            self.report.latency_s += bd.latency_ns * 1e-9
-            self.report.congestion_s += bd.congestion_ns * 1e-9
-            self.report.bandwidth_s += bd.bandwidth_ns * 1e-9
-            self.report.coherency_s += coh_ns * 1e-9
-            self.report.per_pool_latency_ns += bd.per_pool_latency_ns
-            self.report.per_switch_congestion_ns += bd.per_switch_congestion_ns
-            self.report.per_switch_bandwidth_ns += bd.per_switch_bandwidth_ns
-            delay_ns += bd.total_ns + coh_ns
-        self.report.analyzer_s += time.perf_counter() - a0
+            batch.append(tr)
+        return batch, coh_ns_total
 
-        self.report.simulated_s += native + delay_ns * 1e-9
-        if self.sim.inject_delays and delay_ns > 0:
-            # the paper's delay injection: the host program observes the
-            # simulated-topology execution speed
-            time.sleep(delay_ns * 1e-9)
-            self.report.injected_sleep_s += delay_ns * 1e-9
+    def _analyze_and_accumulate(self, batch: List[MemEvents], coh_ns: float) -> float:
+        """Analyze one step's epoch batch and fold it into the report.
+
+        Runs on the async worker thread (or inline in sync mode); returns
+        the step's total delay in ns.  ``analyzer_s`` accumulates the
+        analyzer's own compute time regardless of overlap."""
+        a0 = time.perf_counter()
+        if isinstance(self._analyzer, EpochAnalyzer):
+            bd: DelayBreakdown = self._analyzer.analyze_batch(batch)
+        else:
+            bd = DelayBreakdown.zero(self.sim.flat.n_pools, self.sim.flat.n_switches)
+            for tr in batch:
+                bd = bd + self._analyzer.simulate(tr)
+        elapsed = time.perf_counter() - a0
+        delay_ns = bd.total_ns + coh_ns
+        with self._report_lock:
+            r = self._report
+            r.epochs += len(batch)
+            r.latency_s += bd.latency_ns * 1e-9
+            r.congestion_s += bd.congestion_ns * 1e-9
+            r.bandwidth_s += bd.bandwidth_ns * 1e-9
+            r.coherency_s += coh_ns * 1e-9
+            r.per_pool_latency_ns += bd.per_pool_latency_ns
+            r.per_switch_congestion_ns += bd.per_switch_congestion_ns
+            r.per_switch_bandwidth_ns += bd.per_switch_bandwidth_ns
+            r.simulated_s += delay_ns * 1e-9
+            r.analyzer_s += elapsed
+        return delay_ns
+
+    def step(self, *args, **kwargs):
+        """Run one real step under simulation; returns the step's outputs.
+
+        In async mode the step's epoch batch is submitted *before* the
+        native dispatch, so the analyzer works while the step executes;
+        totals become visible via :attr:`report` (which flushes)."""
+        batch, coh_ns = self._epoch_batch()
+        if self._pipeline is not None:
+            self._pipeline.submit(batch, coh_ns)
+
+        t0 = time.perf_counter()
+        out = self.step_fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        native = time.perf_counter() - t0
+        with self._report_lock:
+            self._report.native_s += native
+            self._report.simulated_s += native
+            self._report.steps += 1
+
+        if self._pipeline is None:
+            delay_ns = self._analyze_and_accumulate(batch, coh_ns)
+            if self.sim.inject_delays and delay_ns > 0:
+                # the paper's delay injection: the host program observes the
+                # simulated-topology execution speed
+                time.sleep(delay_ns * 1e-9)
+                self._report.injected_sleep_s += delay_ns * 1e-9
         return out
 
     def run(self, n_steps: int, *args, **kwargs) -> SimReport:
         for _ in range(n_steps):
             self.step(*args, **kwargs)
-        return self.report
+        self.flush()
+        return self._report

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for the congestion serial-queue scan (paper §3, delay 2).
+"""Pallas TPU kernels for the congestion serial-queue scan (paper §3, delay 2).
 
 The Timing Analyzer's hot loop is, per switch, the FIFO queue
 ``out_i = max(arr_i, out_{i-1} + STT)`` over the time-sorted events that
@@ -10,15 +10,35 @@ turns it into two prefix scans (a cumsum over the mask and a cummax over the
 shifted arrivals), which map onto the TPU VPU as log₂(B) lane-shift/max steps
 per block plus a scalar carry between sequential grid steps.
 
+Two kernels:
+
+  * :func:`congestion_scan` — one switch's queue over a pre-sorted epoch
+    (the original single-stage kernel; kept for the legacy per-stage path).
+  * :func:`congestion_cascade` — the fused S-stage cascade: one kernel
+    launch walks every switch stage (deepest first) over the same epoch.
+    Grid is ``(S, N/B)``; the per-switch carries (running cummax ``f``,
+    masked-event rank, and the stage's delay sum) live in SMEM and are reset
+    at the first block of each stage, extending the single-switch scan's
+    carry scheme.  The full epoch's current times / route bits / slot
+    indices persist in VMEM scratch across sequential grid steps; after each
+    stage the last block restores the sorted-by-current-time invariant by
+    merging the two sorted runs (queued vs untouched events) with rank
+    arithmetic — no re-sort, so the whole cascade needs exactly one host
+    sort.  This matches ``analyze_ref``'s per-stage re-sort semantics.
+
 TPU adaptation notes (vs the paper's sequential C++ loop):
   * events live in HBM as (1, N) f32 rows; each grid step pulls a (1, B)
     tile into VMEM (BlockSpec below), B = 2048 lanes;
   * prefix scans are done with jnp.cumsum / lax.cummax inside the block —
     XLA lowers them to log-depth vector ops on the 8×128 VPU;
-  * the inter-block carry (running max f and running rank) is kept in an
-    SMEM scratch, exploiting the fact that the TPU grid is executed
-    sequentially — this is the idiomatic TPU replacement for the GPU-style
-    decoupled-lookback scan.
+  * the inter-block carry is kept in an SMEM scratch, exploiting the fact
+    that the TPU grid is executed sequentially — this is the idiomatic TPU
+    replacement for the GPU-style decoupled-lookback scan;
+  * the cascade's inter-stage merge uses dynamic gather/scatter on the VMEM
+    scratch; it is validated in interpret mode (the CPU test/bench path).
+    On hosts without a TPU the production analyzer path is the fused
+    ``inline`` XLA variant (:func:`repro.kernels.ref.serial_queue_cascade`),
+    which is semantically identical.
 """
 
 from __future__ import annotations
@@ -30,7 +50,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["congestion_scan", "DEFAULT_BLOCK"]
+from . import ref as _ref
+
+__all__ = ["congestion_cascade", "congestion_scan", "DEFAULT_BLOCK"]
 
 DEFAULT_BLOCK = 2048
 _NEG = -1e30  # sentinel "minus infinity" safely inside f32
@@ -109,3 +131,142 @@ def congestion_scan(
         interpret=interpret,
     )(t2, m2, stt_arr)
     return out[0, :n], delay[0, :n]
+
+
+# --------------------------------------------------------------------------- #
+# Fused multi-stage cascade
+# --------------------------------------------------------------------------- #
+
+
+def _cascade_kernel(
+    t_ref,  # (1, B) tile of the time-sorted arrivals (read at stage 0 only)
+    bits_ref,  # (1, B) tile of per-event route bits (stage s <-> bit s)
+    stt_ref,  # (S,) service times in stage order
+    tout_ref,  # (1, N) final post-congestion times (sorted slot order)
+    idx_ref,  # (1, N) slot -> original sorted position
+    delay_ref,  # (1, 1) per-stage delay sum, block s of a (1, S) output
+    t_buf,  # VMEM (1, N): current times, kept sorted across stages
+    bits_buf,  # VMEM (1, N): route bits, permuted alongside t_buf
+    idx_buf,  # VMEM (1, N): original sorted position, permuted alongside
+    carry_ref,  # SMEM f32[3]: [0]=running cummax, [1]=rank, [2]=delay sum
+):
+    """One (stage, block) step of the fused cascade; see module docstring."""
+    s = pl.program_id(0)
+    b = pl.program_id(1)
+    nb = pl.num_programs(1)
+    n_stages = pl.num_programs(0)
+    block = t_ref.shape[1]
+    off = b * block
+
+    @pl.when(s == 0)
+    def _load():
+        t_buf[0, pl.ds(off, block)] = t_ref[0, :]
+        bits_buf[0, pl.ds(off, block)] = bits_ref[0, :]
+        iota = jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+        idx_buf[0, pl.ds(off, block)] = iota[0, :] + off
+
+    @pl.when(b == 0)
+    def _reset_stage_carries():
+        carry_ref[0] = _NEG
+        carry_ref[1] = 0.0
+        carry_ref[2] = 0.0
+
+    t = t_buf[0, pl.ds(off, block)]
+    bits = bits_buf[0, pl.ds(off, block)]
+    m = (jnp.right_shift(bits, s) & 1) == 1
+    stt = stt_ref[s]
+    mf = m.astype(t.dtype)
+
+    rank = (jnp.cumsum(mf) - 1.0) + carry_ref[1]
+    g = jnp.where(m, t - stt * rank, _NEG)
+    f_local = jax.lax.cummax(g)
+    f = jnp.maximum(f_local, carry_ref[0])
+    start = jnp.where(m, f + stt * rank, t)
+
+    t_buf[0, pl.ds(off, block)] = start
+    carry_ref[0] = jnp.maximum(carry_ref[0], f_local[-1])
+    carry_ref[1] = carry_ref[1] + jnp.sum(mf)
+    carry_ref[2] = carry_ref[2] + jnp.sum(jnp.where(m, start - t, 0.0))
+
+    @pl.when(b == nb - 1)
+    def _finish_stage():
+        delay_ref[0, 0] = carry_ref[2]
+
+        @pl.when((s < n_stages - 1) & (carry_ref[2] > 0))
+        def _merge():
+            # The stage rewrote its masked events: the full row is now two
+            # interleaved sorted runs.  Restore the sorted invariant so the
+            # next stage's scan sees true arrival order (zero delay => times
+            # unchanged => already sorted => skipped).
+            x = t_buf[0, :]
+            bt = bits_buf[0, :]
+            ix = idx_buf[0, :]
+            changed = (jnp.right_shift(bt, s) & 1) == 1
+            x, bt, ix = _ref.merge_sorted_runs(x, changed, bt, ix)
+            t_buf[0, :] = x
+            bits_buf[0, :] = bt
+            idx_buf[0, :] = ix
+
+        @pl.when(s == n_stages - 1)
+        def _write_out():
+            tout_ref[0, :] = t_buf[0, :]
+            idx_ref[0, :] = idx_buf[0, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def congestion_cascade(
+    t_sorted: jnp.ndarray,  # [N] f32, globally time-sorted arrivals
+    route_bits: jnp.ndarray,  # [N] i32, bit s set iff event traverses stage s
+    stts: jnp.ndarray,  # [S] f32, service times in stage order
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+):
+    """Fused S-stage congestion cascade in a single kernel launch.
+
+    Returns ``(t_final[N], slot_idx[N], per_stage_delay[S])`` with the same
+    semantics as :func:`repro.kernels.ref.serial_queue_cascade`: ``t_final``
+    is in final sorted-slot order and ``slot_idx`` maps each slot back to its
+    position in the input ``t_sorted``.
+    """
+    n = t_sorted.shape[0]
+    n_stages = int(stts.shape[0])
+    if n % block != 0:
+        pad = block - n % block
+        t_sorted = jnp.pad(
+            t_sorted, (0, pad), constant_values=jnp.finfo(t_sorted.dtype).max / 4
+        )
+        route_bits = jnp.pad(route_bits, (0, pad))
+    npad = t_sorted.shape[0]
+    nb = npad // block
+
+    t2 = t_sorted.reshape(1, npad)
+    bits2 = route_bits.astype(jnp.int32).reshape(1, npad)
+    stt_arr = jnp.asarray(stts, t_sorted.dtype)
+
+    t_fin, idx, delay = pl.pallas_call(
+        _cascade_kernel,
+        grid=(n_stages, nb),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda s, b: (0, b)),  # arrival tile
+            pl.BlockSpec((1, block), lambda s, b: (0, b)),  # route-bit tile
+            pl.BlockSpec(memory_space=pl.ANY),  # stts vector
+        ],
+        out_specs=[
+            pl.BlockSpec((1, npad), lambda s, b: (0, 0)),  # t_final row
+            pl.BlockSpec((1, npad), lambda s, b: (0, 0)),  # slot idx row
+            pl.BlockSpec((1, 1), lambda s, b: (0, s)),  # stage delay cell
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, npad), t_sorted.dtype),
+            jax.ShapeDtypeStruct((1, npad), jnp.int32),
+            jax.ShapeDtypeStruct((1, n_stages), t_sorted.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, npad), t_sorted.dtype),
+            pltpu.VMEM((1, npad), jnp.int32),
+            pltpu.VMEM((1, npad), jnp.int32),
+            pltpu.SMEM((3,), t_sorted.dtype),
+        ],
+        interpret=interpret,
+    )(t2, bits2, stt_arr)
+    return t_fin[0, :n], idx[0, :n], delay[0, :]

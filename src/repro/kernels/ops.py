@@ -21,12 +21,14 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .congestion import congestion_cascade as _cascade_pallas
 from .congestion import congestion_scan as _congestion_pallas
 from .flash_attention import flash_attention as _flash_pallas
 from .ssd_scan import ssd_scan as _ssd_pallas
 
 __all__ = [
     "attention",
+    "congestion_cascade",
     "congestion_queue",
     "get_implementation",
     "set_implementation",
@@ -123,4 +125,28 @@ def congestion_queue(
         return start, jnp.where(mask, start - t_sorted, 0.0)
     return _congestion_pallas(
         t_sorted, mask, stt, block=block, interpret=(i == "pallas_interpret")
+    )
+
+
+def congestion_cascade(
+    t_sorted: jnp.ndarray,
+    route_bits: jnp.ndarray,
+    stts: jnp.ndarray,
+    impl: Optional[str] = None,
+    block: int = 2048,
+    merge_plan=None,
+):
+    """Fused S-stage congestion cascade over one time-sorted epoch.
+
+    Returns ``(t_final, slot_idx, per_stage_delay)``; see
+    :func:`repro.kernels.ref.serial_queue_cascade` for the semantics.
+    ``merge_plan`` (static, from :func:`repro.core.analyzer.plan_cascade`)
+    prunes inter-stage merges on the ``'ref'`` path; the Pallas kernel
+    always runs the conservative (always-valid) schedule.
+    """
+    i = _resolve(impl)
+    if i == "ref":
+        return ref.serial_queue_cascade(t_sorted, route_bits, stts, merge_plan)
+    return _cascade_pallas(
+        t_sorted, route_bits, stts, block=block, interpret=(i == "pallas_interpret")
     )

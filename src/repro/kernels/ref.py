@@ -10,7 +10,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["serial_queue", "mha_attention", "ssd_naive", "ssd_chunked"]
+__all__ = [
+    "merge_sorted_runs",
+    "serial_queue",
+    "serial_queue_cascade",
+    "mha_attention",
+    "ssd_naive",
+    "ssd_chunked",
+]
 
 
 # --------------------------------------------------------------------------- #
@@ -33,6 +40,130 @@ def serial_queue(t_sorted: jnp.ndarray, mask: jnp.ndarray, stt) -> jnp.ndarray:
     g = jnp.where(mask, t_sorted - stt * rankf, -big)
     f = jax.lax.cummax(g)
     return jnp.where(mask, f + stt * rankf, t_sorted)
+
+
+def merge_sorted_runs(
+    x: jnp.ndarray,
+    changed: jnp.ndarray,
+    *payloads: jnp.ndarray,
+    within: jnp.ndarray = None,
+):
+    """Restore sortedness of ``x`` after a masked serial-queue update.
+
+    ``x`` interleaves two individually-sorted runs: the ``changed`` events
+    (whose values a queue just rewrote — FIFO start times are non-decreasing
+    along the array) and the rest (still in the previously-sorted order).
+    Merging two sorted runs needs no sort: each element's merged position is
+    its rank within its own run plus a ``searchsorted`` count against the
+    other run.  Ties place changed-run elements first.
+
+    With ``within`` (a superset of ``changed``), only the ``within``
+    subsequence is merged — its elements are redistributed over the
+    ``within`` positions, everything else stays put.  This is how the
+    cascade stitches several sorted runs back together piecewise when a
+    topology's stage masks overlap only partially.
+
+    Returns ``(x, *payloads)`` permuted into the merged order.
+    """
+    n = x.shape[0]
+    inf = jnp.asarray(jnp.inf, x.dtype)
+    w = jnp.ones_like(changed) if within is None else within
+    a = changed
+    b = w & ~changed
+    idx_a = jnp.cumsum(a.astype(jnp.int32)) - 1
+    idx_b = jnp.cumsum(b.astype(jnp.int32)) - 1
+    drop = jnp.int32(n)  # out-of-bounds index: dropped by scatter mode='drop'
+    a_run = jnp.full((n,), inf, x.dtype).at[jnp.where(a, idx_a, drop)].set(
+        x, mode="drop"
+    )
+    b_run = jnp.full((n,), inf, x.dtype).at[jnp.where(b, idx_b, drop)].set(
+        x, mode="drop"
+    )
+    rank = jnp.where(
+        a,
+        idx_a + jnp.searchsorted(b_run, x, side="left"),
+        idx_b + jnp.searchsorted(a_run, x, side="right"),
+    )
+    iota = jnp.arange(n, dtype=jnp.int32)
+    if within is None:
+        pos = rank
+    else:
+        idx_w = jnp.cumsum(w.astype(jnp.int32)) - 1
+        w_pos = jnp.full((n,), drop, jnp.int32).at[jnp.where(w, idx_w, drop)].set(
+            iota, mode="drop"
+        )
+        pos = jnp.where(w, jnp.take(w_pos, rank, mode="clip"), iota)
+    return tuple(jnp.zeros_like(p).at[pos].set(p) for p in (x,) + payloads)
+
+
+def serial_queue_cascade(
+    t_sorted: jnp.ndarray,  # [N] f32, globally time-sorted arrivals
+    route_bits: jnp.ndarray,  # [N] i32, bit s set iff event traverses stage s
+    stts: jnp.ndarray,  # [S] f32, service times in stage order
+    merge_plan=None,  # static: per-stage tuple of (changed_bit, within_bit|None)
+):
+    """Fused S-stage congestion cascade over one time-sorted epoch.
+
+    Runs every switch's serial queue (deepest stage first, encoded by the
+    caller's stage order) over the same array with **one** initial sort: the
+    array is kept physically sorted (per stage mask) by *current* time
+    throughout, so each stage's scan sees true arrival order.  This
+    reproduces the per-stage re-sort of ``analyze_ref`` exactly (up to tie
+    attribution at identical float times) without ever re-sorting.
+
+    ``merge_plan`` (static) lists, per stage, the :func:`merge_sorted_runs`
+    ops to run *before* that stage's scan: each op names the route-bit of
+    the sorted run to fold in and the route-bit of the subsequence to merge
+    within (``None`` = whole array).  ``None`` for the whole plan selects
+    the conservative schedule — a full two-run merge before every stage,
+    folding in the previous stage's events — which is always valid.  The
+    epoch analyzer derives a minimal plan from the topology's route matrix
+    (nested or disjoint stage masks need no merge at all: a subsequence of
+    a sorted run is sorted).  All merges are skipped at runtime while no
+    stage has accumulated any delay.
+
+    Returns ``(t_final, slot_idx, per_stage_delay)`` where ``t_final[k]`` is
+    the post-congestion time of the event originally at sorted position
+    ``slot_idx[k]``, and ``per_stage_delay[s]`` is the summed queueing delay
+    at stage ``s``.
+    """
+    f32 = t_sorted.dtype
+    n = t_sorted.shape[0]
+    s_stages = stts.shape[0]
+    if merge_plan is None:
+        merge_plan = tuple(((s - 1, None),) if s else () for s in range(s_stages))
+    big = jnp.asarray(jnp.finfo(f32).max / 4, f32)
+    ts = t_sorted
+    bits = route_bits.astype(jnp.int32)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    dirty = jnp.zeros((), f32)  # total delay so far; 0 => nothing ever moved
+    per_stage = []
+    for s in range(s_stages):
+        for changed_bit, within_bit in merge_plan[s]:
+            changed = (jnp.right_shift(bits, changed_bit) & 1) == 1
+            if within_bit is None:
+                args = (ts, bits, idx, changed)
+                merge = lambda a: merge_sorted_runs(a[0], a[3], a[1], a[2])
+            else:
+                within = (jnp.right_shift(bits, within_bit) & 1) == 1
+                args = (ts, bits, idx, changed, within)
+                merge = lambda a: merge_sorted_runs(
+                    a[0], a[3], a[1], a[2], within=a[4]
+                )
+            ts, bits, idx = jax.lax.cond(
+                dirty > 0, merge, lambda a: (a[0], a[1], a[2]), args
+            )
+        m = (jnp.right_shift(bits, s) & 1) == 1
+        stt = stts[s]
+        rankf = (jnp.cumsum(m.astype(jnp.int32)) - 1).astype(f32)
+        g = jnp.where(m, ts - stt * rankf, -big)
+        f = jax.lax.cummax(g)
+        start = jnp.where(m, f + stt * rankf, ts)
+        dsum = jnp.where(m, start - ts, 0.0).sum()
+        per_stage.append(dsum)
+        dirty = dirty + dsum
+        ts = jnp.where(m, start, ts)
+    return ts, idx, jnp.stack(per_stage)
 
 
 # --------------------------------------------------------------------------- #

@@ -2,6 +2,8 @@
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.analyzer import (

@@ -1,0 +1,288 @@
+"""Fused epoch-analysis pipeline: oracle agreement over randomized
+multi-switch topologies and bursty traces, batched-vs-sequential
+equivalence, merge planning, staging-buffer reuse, and the async attach
+path.  No optional deps — this file keeps the deterministic analyzer
+coverage alive when ``hypothesis`` (tests/test_analyzer.py) is absent."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.analyzer import (
+    EpochAnalyzer,
+    FineGrainedSimulator,
+    analyze_ref,
+    plan_cascade,
+)
+from repro.core.events import EventStager, MemEvents, concat_events, synthetic_trace
+from repro.core.topology import Pool, Switch, Topology, figure1_topology
+from repro.kernels.congestion import congestion_cascade
+from repro.kernels.ref import merge_sorted_runs, serial_queue_cascade
+
+FLAT = figure1_topology().flatten()
+
+
+def chain_topology(depth: int = 3) -> Topology:
+    """All remote pools behind a ``depth``-switch chain (zero-merge plan)."""
+    switches = [
+        Switch(f"sw{d}", 70.0, 64.0 - 8.0 * d, 2.0 + d, parent=f"sw{d-1}" if d else None)
+        for d in range(depth)
+    ]
+    return Topology(
+        pools=[
+            Pool("local", 88.9, 76.8, 1 << 36, is_local=True),
+            Pool("far1", 180.0, 32.0, 1 << 38, parent=f"sw{depth-1}"),
+            Pool("far2", 200.0, 32.0, 1 << 38, parent=f"sw{depth-1}"),
+        ],
+        switches=switches,
+    )
+
+
+def random_tree_topology(seed: int) -> Topology:
+    """Random switch tree with pools hung at random levels."""
+    rng = np.random.default_rng(seed)
+    n_sw = int(rng.integers(1, 5))
+    switches = []
+    for i in range(n_sw):
+        parent = None if i == 0 else f"sw{int(rng.integers(0, i))}"
+        switches.append(
+            Switch(
+                f"sw{i}",
+                latency_ns=float(rng.uniform(30, 90)),
+                bandwidth_gbps=float(rng.uniform(16, 64)),
+                stt_ns=float(rng.uniform(0.5, 6.0)),
+                parent=parent,
+            )
+        )
+    pools = [Pool("local", 88.9, 76.8, 1 << 36, is_local=True)]
+    for p in range(int(rng.integers(1, 4))):
+        parent = f"sw{int(rng.integers(0, n_sw))}" if rng.random() < 0.8 else None
+        pools.append(
+            Pool(
+                f"pool{p}",
+                latency_ns=float(rng.uniform(120, 260)),
+                bandwidth_gbps=float(rng.uniform(16, 48)),
+                capacity_bytes=1 << 38,
+                parent=parent,
+            )
+        )
+    return Topology(pools=pools, switches=switches)
+
+
+# --------------------------------------------------------------------------- #
+# oracle agreement (randomized topologies x bursty traces x impls)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("impl", ["inline", "pallas_interpret"])
+def test_fused_matches_ref_on_random_topologies(seed, impl):
+    flat = random_tree_topology(seed).flatten()
+    burst = (0.0, 0.5, 0.9)[seed % 3]
+    ev = synthetic_trace(1500 + 700 * seed, flat.n_pools, epoch_ns=3e5, seed=seed, burstiness=burst)
+    ref = analyze_ref(flat, ev)
+    got = EpochAnalyzer(flat, impl=impl).analyze(ev)
+    assert got.latency_ns == pytest.approx(ref.latency_ns, rel=1e-4, abs=1e-3)
+    assert got.congestion_ns == pytest.approx(ref.congestion_ns, rel=1e-3, abs=1e-2)
+    assert got.bandwidth_ns == pytest.approx(ref.bandwidth_ns, rel=1e-2, abs=1.0)
+    np.testing.assert_allclose(
+        got.per_switch_congestion_ns, ref.per_switch_congestion_ns, rtol=2e-3, atol=0.1
+    )
+
+
+@pytest.mark.parametrize("burst", [0.0, 0.7, 0.95])
+def test_fused_matches_ref_bursty_chain(burst):
+    flat = chain_topology(3).flatten()
+    ev = synthetic_trace(8000, flat.n_pools, epoch_ns=5e5, seed=7, burstiness=burst)
+    ref = analyze_ref(flat, ev)
+    got = EpochAnalyzer(flat).analyze(ev)
+    assert got.congestion_ns == pytest.approx(ref.congestion_ns, rel=1e-3, abs=1e-2)
+
+
+def test_fused_matches_legacy_path():
+    """fused=True and the seed per-stage loop agree on the same trace."""
+    ev = synthetic_trace(4000, FLAT.n_pools, epoch_ns=1e6, seed=11, burstiness=0.8)
+    fused = EpochAnalyzer(FLAT).analyze(ev)
+    legacy = EpochAnalyzer(FLAT, fused=False).analyze(ev)
+    assert fused.congestion_ns == pytest.approx(legacy.congestion_ns, rel=1e-4)
+    assert fused.latency_ns == pytest.approx(legacy.latency_ns, rel=1e-5)
+    assert fused.bandwidth_ns == pytest.approx(legacy.bandwidth_ns, rel=1e-3, abs=1.0)
+
+
+def test_ref_matches_fine_grained():
+    """Oracle vs event-by-event DES (stt mode) — kept from test_analyzer."""
+    ev = synthetic_trace(2000, FLAT.n_pools, epoch_ns=1e6, seed=1, burstiness=0.5)
+    ref = analyze_ref(FLAT, ev)
+    des = FineGrainedSimulator(FLAT, bandwidth_mode="stt").simulate(ev)
+    assert ref.congestion_ns == pytest.approx(des.congestion_ns, rel=1e-6)
+
+
+def test_unsorted_trace_is_sorted_by_stager():
+    ev = synthetic_trace(3000, FLAT.n_pools, epoch_ns=1e6, seed=3, burstiness=0.8)
+    perm = np.random.default_rng(0).permutation(ev.n)
+    a = EpochAnalyzer(FLAT).analyze(ev)
+    b = EpochAnalyzer(FLAT).analyze(ev.take(perm))
+    assert b.congestion_ns == pytest.approx(a.congestion_ns, rel=1e-5)
+    assert b.latency_ns == pytest.approx(a.latency_ns, rel=1e-6)
+
+
+def test_empty_trace_and_bucketing():
+    an = EpochAnalyzer(FLAT)
+    assert an.analyze(MemEvents.empty()).total_ns == 0.0
+    ev = synthetic_trace(100, FLAT.n_pools, epoch_ns=1e5, seed=0)
+    a, b = an.analyze(ev), an.analyze(ev)  # second call: warm caches + buffers
+    assert a.total_ns == pytest.approx(b.total_ns)
+
+
+# --------------------------------------------------------------------------- #
+# batching
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("impl", ["inline", "pallas_interpret"])
+def test_analyze_batch_equals_sequential(impl):
+    an = EpochAnalyzer(FLAT, impl=impl)
+    traces = [
+        synthetic_trace(n, FLAT.n_pools, epoch_ns=1e6, seed=i, burstiness=0.6)
+        for i, n in enumerate((1200, 3000, 500, 2048, 1))
+    ]
+    seq = an.analyze(traces[0])
+    for tr in traces[1:]:
+        seq = seq + an.analyze(tr)
+    bat = an.analyze_batch(traces)
+    assert bat.latency_ns == pytest.approx(seq.latency_ns, rel=1e-5)
+    assert bat.congestion_ns == pytest.approx(seq.congestion_ns, rel=1e-4)
+    assert bat.bandwidth_ns == pytest.approx(seq.bandwidth_ns, rel=1e-3, abs=1.0)
+    np.testing.assert_allclose(
+        bat.per_pool_latency_ns, seq.per_pool_latency_ns, rtol=1e-4
+    )
+
+
+def test_analyze_batch_with_empty_members():
+    an = EpochAnalyzer(FLAT)
+    ev = synthetic_trace(600, FLAT.n_pools, epoch_ns=1e5, seed=2)
+    bat = an.analyze_batch([MemEvents.empty(), ev, MemEvents.empty()])
+    assert bat.total_ns == pytest.approx(an.analyze(ev).total_ns, rel=1e-5)
+    assert an.analyze_batch([]).total_ns == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# merge planning + kernel internals
+# --------------------------------------------------------------------------- #
+
+
+def test_plan_chain_needs_no_merges():
+    _, plan, _ = plan_cascade(chain_topology(3).flatten())
+    assert plan is not None and all(len(ops) == 0 for ops in plan)
+
+
+def test_plan_figure1_needs_one_merge():
+    _, plan, _ = plan_cascade(FLAT)
+    assert plan is not None and sum(len(ops) for ops in plan) == 1
+
+
+def test_cascade_kernel_matches_jnp_reference():
+    rng = np.random.default_rng(5)
+    n, s = 3000, 3
+    ts = np.sort(rng.uniform(0, 1e5, n)).astype(np.float32)
+    bits = rng.integers(0, 1 << s, n).astype(np.int32)
+    stts = jnp.asarray([4.0, 2.0, 0.5], jnp.float32)
+    tf_r, idx_r, psd_r = serial_queue_cascade(jnp.asarray(ts), jnp.asarray(bits), stts)
+    tf_k, idx_k, psd_k = congestion_cascade(
+        jnp.asarray(ts), jnp.asarray(bits), stts, block=1024, interpret=True
+    )
+    np.testing.assert_allclose(psd_k, psd_r, rtol=1e-5)
+    np.testing.assert_allclose(tf_k, tf_r, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(idx_k), np.asarray(idx_r))
+
+
+def test_merge_sorted_runs_within_mask():
+    """Piecewise merge: only the `within` subsequence is permuted."""
+    # both runs sorted along storage: changed [5, 9], unchanged-within [2, 3]
+    x = jnp.asarray([1.0, 5.0, 2.0, 9.0, 3.0, 7.0], jnp.float32)
+    changed = jnp.asarray([False, True, False, True, False, False])
+    within = jnp.asarray([False, True, True, True, True, False])
+    payload = jnp.arange(6, dtype=jnp.int32)
+    xm, pm = merge_sorted_runs(x, changed, payload, within=within)
+    # within-subsequence values {5,2,9,3} come back sorted over the within
+    # positions {1,2,3,4}; positions 0 and 5 untouched
+    np.testing.assert_allclose(np.asarray(xm), [1.0, 2.0, 3.0, 5.0, 9.0, 7.0])
+    assert list(np.asarray(pm)) == [0, 2, 4, 1, 3, 5]
+
+
+# --------------------------------------------------------------------------- #
+# staging buffers
+# --------------------------------------------------------------------------- #
+
+
+def test_event_stager_reuses_buffers():
+    st = EventStager()
+    ev1 = synthetic_trace(100, 3, epoch_ns=1e4, seed=0)
+    ev2 = synthetic_trace(90, 3, epoch_ns=1e4, seed=1)
+    buf1 = st.stage([ev1], 1, 128)
+    t1 = buf1["t"]
+    buf2 = st.stage([ev2], 1, 128)
+    assert buf2["t"] is t1  # same backing array, refilled in place
+    assert not buf2["valid"][0, 90:].any()  # previous epoch's tail cleared
+    np.testing.assert_allclose(buf2["t"][0, :90], np.sort(ev2.t_ns), rtol=1e-6)
+
+
+def test_event_stager_sorts_unsorted_rows():
+    t = np.array([5.0, 1.0, 3.0])
+    ev = MemEvents.build(t, [1, 2, 1], [64, 64, 64])
+    buf = EventStager().stage([ev], 1, 16)
+    np.testing.assert_allclose(buf["t"][0, :3], [1.0, 3.0, 5.0])
+    np.testing.assert_array_equal(buf["pool"][0, :3], [2, 1, 1])
+
+
+# --------------------------------------------------------------------------- #
+# async attach pipeline
+# --------------------------------------------------------------------------- #
+
+
+def _toy_attach(async_mode):
+    from repro.core import CXLMemSim, ClassMapPolicy, RegionMap, two_tier_topology
+    from repro.core.tracer import Access, Phase
+
+    regions = RegionMap()
+    regions.alloc("w", 1 << 22, "param")
+    regions.alloc("opt", 1 << 23, "opt_state")
+    phases = [
+        Phase("fwd", flops=1e8, accesses=(Access("w", 1 << 22),)),
+        Phase("opt", flops=1e7, accesses=(Access("opt", 1 << 23, True),)),
+    ]
+    step = jax.jit(lambda x: (x * x).sum())
+    sim = CXLMemSim(
+        two_tier_topology(),
+        ClassMapPolicy({"opt_state": "cxl_pool"}),
+        async_analysis=async_mode,
+    )
+    return sim.attach(step, phases, regions)
+
+
+def test_async_attach_matches_sync():
+    x = jnp.ones((64, 64))
+    reports = {}
+    for mode in (False, True):
+        prog = _toy_attach(mode)
+        prog.run(3, x)
+        reports[mode] = prog.report
+        prog.close()
+    a, b = reports[False], reports[True]
+    assert a.epochs == b.epochs == 3
+    assert b.latency_s == pytest.approx(a.latency_s, rel=1e-6)
+    assert b.congestion_s == pytest.approx(a.congestion_s, rel=1e-6)
+    assert b.bandwidth_s == pytest.approx(a.bandwidth_s, rel=1e-5)
+    assert b.analyzer_s > 0  # overhead accounting preserved under overlap
+
+
+def test_report_read_flushes_async_work():
+    prog = _toy_attach(True)
+    x = jnp.ones((64, 64))
+    for _ in range(4):
+        prog.step(x)
+    r = prog.report  # property flushes the pipeline
+    assert r.steps == 4 and r.epochs == 4
+    assert r.latency_s > 0
+    prog.close()
