@@ -1,0 +1,207 @@
+"""Shared-fabric contention sweep -> BENCH_fabric.json perf/fidelity record.
+
+Sweeps co-attached host count x shared-pool bandwidth on the pooling
+topology and records, per cell:
+
+  * ``fabric_*``        — congestion/bandwidth/latency of the merged
+                          shared-timeline analysis (the new multi-host mode),
+  * ``private_*``       — the same per-host traces analyzed on private
+                          copies of the topology and summed (what the seed
+                          repo could express: no cross-host contention),
+  * ``amplification``   — fabric / private contention (> 1 iff sharing the
+                          fabric actually costs something; the whole point
+                          of the pooling scenario),
+  * ``host_sum_err``    — closure error of the per-host decomposition
+                          against the fabric totals (must be ~0),
+  * ``s_per_epoch``     — wall time of the fused analyzer on the merged
+                          timeline.
+
+A second sweep holds the fabric fixed (2 hosts) and skews the tenants
+(noisy-neighbor): the victim's contention delay is recorded as a function
+of the neighbor's traffic multiplier.
+
+Acceptance gate (ISSUE 2): at every >= 2-host cell, fabric congestion +
+bandwidth strictly exceeds the private baseline, and per-host breakdowns
+sum to the fabric totals within 1e-4 relative (the fused analyzer
+accumulates in float32, so totals and host segments differ by reduction
+order; the float64 oracle closes to ~1e-9).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.analyzer import EpochAnalyzer, analyze_ref
+from repro.core.events import MemEvents, merge_host_traces, synthetic_trace
+from repro.core.topology import pooled_topology
+
+EPOCH_NS = 2e5
+
+
+def _host_trace(n: int, seed: int, nbytes: float = 4096.0) -> MemEvents:
+    """Bursty traffic split between local DRAM and the shared pool."""
+    return synthetic_trace(
+        n, 2, epoch_ns=EPOCH_NS, granule_bytes=nbytes,
+        pool_probs=(0.3, 0.7), seed=seed, burstiness=0.7,
+    )
+
+
+def _time(fn, reps: int) -> float:
+    fn()  # warm-up / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def sweep_hosts_bandwidth(
+    hosts=(1, 2, 4, 8), bandwidths=(4.0, 8.0, 16.0, 32.0), n_events=8192, reps=3
+) -> List[Dict]:
+    rows: List[Dict] = []
+    for bw in bandwidths:
+        priv_flat = pooled_topology(n_hosts=1, cxl_bandwidth_gbps=bw).flatten()
+        priv_an = EpochAnalyzer(priv_flat)
+        for H in hosts:
+            flat = pooled_topology(n_hosts=H, cxl_bandwidth_gbps=bw).flatten()
+            an = EpochAnalyzer(flat)
+            traces = [_host_trace(n_events, seed=i) for i in range(H)]
+            merged = merge_host_traces(traces)
+            fabric = an.analyze(merged)
+            private = [priv_an.analyze(tr) for tr in traces]
+            priv_cong = sum(p.congestion_ns for p in private)
+            priv_bw = sum(p.bandwidth_ns for p in private)
+            fab_cont = fabric.congestion_ns + fabric.bandwidth_ns
+            priv_cont = priv_cong + priv_bw
+            host_sums = np.array(
+                [
+                    abs(fabric.per_host_congestion_ns.sum() - fabric.congestion_ns),
+                    abs(fabric.per_host_bandwidth_ns.sum() - fabric.bandwidth_ns),
+                    abs(fabric.per_host_latency_ns.sum() - fabric.latency_ns),
+                ]
+            )
+            denom = max(fabric.total_ns, 1.0)
+            s_per_epoch = _time(lambda: an.analyze(merged), reps)
+            rows.append(
+                {
+                    "sweep": "hosts_x_bandwidth",
+                    "hosts": H,
+                    "shared_bw_gbps": bw,
+                    "events_per_host": n_events,
+                    "fabric_congestion_ns": fabric.congestion_ns,
+                    "fabric_bandwidth_ns": fabric.bandwidth_ns,
+                    "fabric_latency_ns": fabric.latency_ns,
+                    "private_congestion_ns": priv_cong,
+                    "private_bandwidth_ns": priv_bw,
+                    "amplification": fab_cont / priv_cont if priv_cont > 0 else float("nan"),
+                    "per_host_congestion_ns": fabric.per_host_congestion_ns.tolist(),
+                    "per_host_bandwidth_ns": fabric.per_host_bandwidth_ns.tolist(),
+                    "host_sum_err": float(host_sums.max() / denom),
+                    "s_per_epoch": s_per_epoch,
+                    "events_per_s": H * n_events / s_per_epoch,
+                }
+            )
+    return rows
+
+
+def sweep_noisy_neighbor(mults=(1, 2, 4, 8, 16), n_events=8192, bw=8.0) -> List[Dict]:
+    """Two hosts; host 1's byte volume scales, host 0 (victim) is fixed."""
+    rows: List[Dict] = []
+    flat = pooled_topology(n_hosts=2, cxl_bandwidth_gbps=bw).flatten()
+    an = EpochAnalyzer(flat)
+    victim = _host_trace(n_events, seed=0)
+    alone = an.analyze(merge_host_traces([victim]))
+    for m in mults:
+        noisy = _host_trace(n_events, seed=1, nbytes=4096.0 * m)
+        bd = an.analyze(merge_host_traces([victim, noisy]))
+        victim_cont = float(bd.per_host_congestion_ns[0] + bd.per_host_bandwidth_ns[0])
+        rows.append(
+            {
+                "sweep": "noisy_neighbor",
+                "neighbor_mult": m,
+                "shared_bw_gbps": bw,
+                "victim_contention_ns": victim_cont,
+                "victim_alone_contention_ns": float(
+                    alone.congestion_ns + alone.bandwidth_ns
+                ),
+                "victim_inflicted_ns": victim_cont
+                - float(alone.congestion_ns + alone.bandwidth_ns),
+                "noisy_contention_ns": float(
+                    bd.per_host_congestion_ns[1] + bd.per_host_bandwidth_ns[1]
+                ),
+            }
+        )
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_fabric.json")
+    ap.add_argument("--quick", action="store_true", help="small sweep (CI smoke)")
+    args = ap.parse_args(argv)
+    # fail on an unwritable record path before the sweep, not after
+    with open(args.out, "a"):
+        pass
+    if args.quick:
+        rows = sweep_hosts_bandwidth(hosts=(1, 2), bandwidths=(8.0,), n_events=2048, reps=1)
+        rows += sweep_noisy_neighbor(mults=(1, 8), n_events=2048)
+    else:
+        rows = sweep_hosts_bandwidth()
+        rows += sweep_noisy_neighbor()
+
+    print(f"{'hosts':>5} {'bw':>5} {'fab cong+bw (ns)':>17} {'priv (ns)':>12} "
+          f"{'amp':>6} {'sum_err':>9} {'ms/epoch':>9}")
+    for r in rows:
+        if r["sweep"] != "hosts_x_bandwidth":
+            continue
+        fab = r["fabric_congestion_ns"] + r["fabric_bandwidth_ns"]
+        priv = r["private_congestion_ns"] + r["private_bandwidth_ns"]
+        print(
+            f"{r['hosts']:>5} {r['shared_bw_gbps']:>5.0f} {fab:>17.3e} {priv:>12.3e} "
+            f"{r['amplification']:>6.2f} {r['host_sum_err']:>9.1e} "
+            f"{r['s_per_epoch'] * 1e3:>9.2f}"
+        )
+    for r in rows:
+        if r["sweep"] != "noisy_neighbor":
+            continue
+        print(
+            f"# noisy x{r['neighbor_mult']:<3}: victim contention "
+            f"{r['victim_contention_ns']:.3e} ns "
+            f"(alone {r['victim_alone_contention_ns']:.3e}, inflicted "
+            f"{r['victim_inflicted_ns']:.3e})"
+        )
+
+    multi = [r for r in rows if r["sweep"] == "hosts_x_bandwidth" and r["hosts"] >= 2]
+    ok_contention = all(
+        r["fabric_congestion_ns"] + r["fabric_bandwidth_ns"]
+        > r["private_congestion_ns"] + r["private_bandwidth_ns"]
+        for r in multi
+    )
+    ok_closure = all(r["host_sum_err"] <= 1e-4 for r in multi)
+    record = {
+        "bench": "fabric_contention",
+        "platform": platform.platform(),
+        "rows": rows,
+        "acceptance": {
+            "shared_exceeds_private_everywhere": bool(ok_contention),
+            "per_host_sums_close": bool(ok_closure),
+            "pass": bool(ok_contention and ok_closure),
+        },
+    }
+    print(
+        f"# acceptance: shared>private {ok_contention}, closure {ok_closure} -> "
+        f"{'PASS' if record['acceptance']['pass'] else 'FAIL'}"
+    )
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"# wrote {args.out}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

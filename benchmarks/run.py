@@ -6,6 +6,7 @@
   throughput      analyzer implementations: events/second (speed claim)
   topology_sweep  Figure-1 topology × placement-policy delay decomposition
   roofline        §Roofline table from the multi-pod dry-run JSON
+  fabric          shared-fabric contention: hosts × bandwidth + noisy neighbor
 
 Run everything:      PYTHONPATH=src python -m benchmarks.run
 Run one:             PYTHONPATH=src python -m benchmarks.run table1
@@ -16,7 +17,9 @@ import time
 
 
 def main() -> None:
-    from benchmarks import accuracy, roofline, table1, throughput, topology_sweep
+    from benchmarks import (
+        accuracy, fabric_contention, roofline, table1, throughput, topology_sweep,
+    )
 
     suites = {
         "table1": table1.main,
@@ -24,6 +27,7 @@ def main() -> None:
         "throughput": throughput.main,
         "topology_sweep": topology_sweep.main,
         "roofline": roofline.main,
+        "fabric": lambda: fabric_contention.main(["--quick"]),
     }
     wanted = sys.argv[1:] or list(suites)
     for name in wanted:

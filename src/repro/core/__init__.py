@@ -21,6 +21,7 @@ from .analyzer import (
 )
 from .attach import AttachedProgram, CXLMemSim, SimReport
 from .coherency import CoherencyConfig, CoherencyModel
+from .fabric import FabricReport, FabricSession, HostClock, Tenant
 from .events import (
     CACHELINE_BYTES,
     PAGE_BYTES,
@@ -29,6 +30,8 @@ from .events import (
     Region,
     RegionMap,
     concat_events,
+    merge_host_traces,
+    split_by_host,
     synthetic_trace,
 )
 from .migration import MigrationConfig, MigrationSimulator
@@ -49,6 +52,7 @@ from .topology import (
     Topology,
     figure1_topology,
     local_only_topology,
+    pooled_topology,
     two_tier_topology,
 )
 from .tracer import (
@@ -72,8 +76,11 @@ __all__ = [
     "EpochAnalyzer",
     "EpochSchedule",
     "EventStager",
+    "FabricReport",
+    "FabricSession",
     "FineGrainedSimulator",
     "FlatTopology",
+    "HostClock",
     "HardwareModel",
     "HotnessTieredPolicy",
     "InterleavePolicy",
@@ -91,6 +98,7 @@ __all__ = [
     "SimReport",
     "Switch",
     "TPU_V5E",
+    "Tenant",
     "Topology",
     "analyze_ref",
     "capacity_check",
@@ -99,9 +107,12 @@ __all__ = [
     "figure1_topology",
     "hlo_cost_summary",
     "local_only_topology",
+    "merge_host_traces",
     "plan_cascade",
+    "pooled_topology",
     "roofline_terms",
     "slice_by_quantum",
+    "split_by_host",
     "synthetic_trace",
     "synthesize_step_trace",
     "two_tier_topology",

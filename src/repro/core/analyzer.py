@@ -87,9 +87,23 @@ __all__ = [
 ]
 
 
+def _opt_add(a: Optional[np.ndarray], b: Optional[np.ndarray]) -> Optional[np.ndarray]:
+    if a is None:
+        return None if b is None else np.array(b, copy=True)
+    if b is None:
+        return np.array(a, copy=True)
+    return a + b
+
+
 @dataclasses.dataclass(frozen=True)
 class DelayBreakdown:
-    """Per-epoch simulated delays (ns), plus per-component decomposition."""
+    """Per-epoch simulated delays (ns), plus per-component decomposition.
+
+    ``per_pool_latency_ns`` stays indexed by *physical* pool (summed over
+    hosts); the optional ``per_host_*`` arrays carry the host-segmented
+    decomposition of each delay class for multi-host fabric analyses.  Each
+    per-host array sums (within analyzer tolerance) to its fabric total.
+    """
 
     latency_ns: float
     congestion_ns: float
@@ -97,10 +111,24 @@ class DelayBreakdown:
     per_pool_latency_ns: np.ndarray  # [P]
     per_switch_congestion_ns: np.ndarray  # [S]
     per_switch_bandwidth_ns: np.ndarray  # [S]
+    per_host_latency_ns: Optional[np.ndarray] = None  # [H]
+    per_host_congestion_ns: Optional[np.ndarray] = None  # [H]
+    per_host_bandwidth_ns: Optional[np.ndarray] = None  # [H]
 
     @property
     def total_ns(self) -> float:
         return self.latency_ns + self.congestion_ns + self.bandwidth_ns
+
+    @property
+    def per_host_total_ns(self) -> Optional[np.ndarray]:
+        """[H] total delay per host (None when host decomposition is absent)."""
+        if self.per_host_latency_ns is None:
+            return None
+        return (
+            self.per_host_latency_ns
+            + self.per_host_congestion_ns
+            + self.per_host_bandwidth_ns
+        )
 
     def __add__(self, other: "DelayBreakdown") -> "DelayBreakdown":
         return DelayBreakdown(
@@ -110,10 +138,13 @@ class DelayBreakdown:
             self.per_pool_latency_ns + other.per_pool_latency_ns,
             self.per_switch_congestion_ns + other.per_switch_congestion_ns,
             self.per_switch_bandwidth_ns + other.per_switch_bandwidth_ns,
+            _opt_add(self.per_host_latency_ns, other.per_host_latency_ns),
+            _opt_add(self.per_host_congestion_ns, other.per_host_congestion_ns),
+            _opt_add(self.per_host_bandwidth_ns, other.per_host_bandwidth_ns),
         )
 
     @staticmethod
-    def zero(n_pools: int, n_switches: int) -> "DelayBreakdown":
+    def zero(n_pools: int, n_switches: int, n_hosts: int = 1) -> "DelayBreakdown":
         return DelayBreakdown(
             0.0,
             0.0,
@@ -121,6 +152,9 @@ class DelayBreakdown:
             np.zeros((n_pools,)),
             np.zeros((n_switches,)),
             np.zeros((n_switches,)),
+            np.zeros((n_hosts,)),
+            np.zeros((n_hosts,)),
+            np.zeros((n_hosts,)),
         )
 
 
@@ -141,6 +175,38 @@ def serial_queue_ref(arrival_sorted: np.ndarray, stt: float) -> np.ndarray:
     return np.maximum.accumulate(arrival_sorted - idx * stt) + idx * stt
 
 
+def _check_reachable(flat: FlatTopology, events: MemEvents) -> None:
+    """Reject events whose (host, pool) pair has no row on this fabric.
+
+    Out-of-range host ids would be silently clamped by the jitted gather
+    (routing the event through the wrong virtual-pool row and dropping it
+    from the host decomposition), and traffic to a pool the issuing host's
+    ports exclude has no fabric route — analyzing it would charge latency
+    with zero switch traversal.  Both are attach-time mistakes, so both
+    raise.
+    """
+    if events.n == 0:
+        return
+    hmax = int(events.host.max())
+    if hmax >= flat.n_hosts or int(events.host.min()) < 0:
+        raise ValueError(
+            f"trace carries host id {hmax} but the topology declares "
+            f"{flat.n_hosts} host(s) — flatten a Topology(n_hosts=...) that "
+            "covers every merged host"
+        )
+    reach = flat.host_reachable
+    if reach is None or reach.all():
+        return
+    bad = ~reach[events.host, events.pool]
+    if bad.any():
+        i = int(np.argmax(bad))
+        raise ValueError(
+            f"event targets pool {flat.pool_names[events.pool[i]]!r} which "
+            f"host {int(events.host[i])}'s ports cannot reach "
+            f"({int(bad.sum())} such events)"
+        )
+
+
 # --------------------------------------------------------------------------- #
 # Reference (numpy, float64) epoch analyzer
 # --------------------------------------------------------------------------- #
@@ -151,26 +217,38 @@ def analyze_ref(
     events: MemEvents,
     bw_window_ns: float = 10_000.0,
 ) -> DelayBreakdown:
-    """Vectorized numpy implementation of the three-delay model (oracle)."""
-    P, S = flat.n_pools, flat.n_switches
+    """Vectorized numpy implementation of the three-delay model (oracle).
+
+    Multi-host fabrics: each event is routed through its virtual pool
+    ``vp = host * n_pools + pool`` (shared switch rows, private RC rows);
+    every delay class additionally comes back host-segmented.  With
+    ``n_hosts == 1`` this is numerically identical to the historical
+    single-host oracle (``vp == pool`` and the host segment is the total).
+    """
+    P, S, H = flat.n_pools, flat.n_switches, flat.n_hosts
     if events.n == 0:
-        return DelayBreakdown.zero(P, S)
+        return DelayBreakdown.zero(P, S, H)
+    _check_reachable(flat, events)
 
     t = events.t_ns.astype(np.float64).copy()
     pool = events.pool.astype(np.int64)
+    host = events.host.astype(np.int64)
+    vp = host * P + pool
     nbytes = events.bytes_.astype(np.float64)
 
     # -- 1. latency delay ------------------------------------------------- #
-    per_event_lat = flat.pool_latency_ns[pool] - flat.local_latency_ns
+    per_event_lat = flat.pool_latency_ns[vp] - flat.local_latency_ns
     per_event_lat = np.maximum(per_event_lat, 0.0) * events.weight
     per_pool_lat = np.bincount(pool, weights=per_event_lat, minlength=P)[:P]
+    per_host_lat = np.bincount(host, weights=per_event_lat, minlength=H)[:H]
     latency_ns = float(per_event_lat.sum())
 
     # -- 2. congestion delay (cascaded serial queues, deepest switch first) - #
     per_switch_cong = np.zeros((S,), np.float64)
+    per_host_cong = np.zeros((H,), np.float64)
     for s in flat.stage_order():
         stt = float(flat.switch_stt_ns[s])
-        mask = flat.route[pool, s] > 0
+        mask = flat.route[vp, s] > 0
         if stt <= 0 or not mask.any():
             continue
         order = np.argsort(t, kind="stable")
@@ -180,6 +258,7 @@ def analyze_ref(
         delay = start - t[sub]
         t[sub] = start
         per_switch_cong[s] = delay.sum()
+        per_host_cong += np.bincount(host[sub], weights=delay, minlength=H)[:H]
     congestion_ns = float(per_switch_cong.sum())
 
     # -- 3. bandwidth delay (windowed, after latency+congestion shifts) ---- #
@@ -191,16 +270,29 @@ def analyze_ref(
     n_win = int(np.ceil(span / bw_window_ns))
     win = np.minimum((t_obs / bw_window_ns).astype(np.int64), n_win - 1)
     per_switch_bw = np.zeros((S,), np.float64)
+    per_host_bw = np.zeros((H,), np.float64)
     for s in range(S):
         bw = float(flat.switch_bandwidth_gbps[s])  # GB/s == bytes/ns
         if bw <= 0:
             continue
-        mask = flat.route[pool, s] > 0
+        mask = flat.route[vp, s] > 0
         if not mask.any():
             continue
-        wbytes = np.bincount(win[mask], weights=nbytes[mask], minlength=n_win)
+        # per-(window, host) bytes through this switch; the window stretch is
+        # attributed to hosts proportionally to their byte share in it
+        key = win[mask] * H + host[mask]
+        wb_h = np.bincount(key, weights=nbytes[mask], minlength=n_win * H)
+        wb_h = wb_h.reshape(n_win, H)
+        wbytes = wb_h.sum(axis=1)
         stretch = np.maximum(wbytes / bw - bw_window_ns, 0.0)
         per_switch_bw[s] = stretch.sum()
+        share = np.divide(
+            wb_h,
+            wbytes[:, None],
+            out=np.zeros_like(wb_h),
+            where=wbytes[:, None] > 0,
+        )
+        per_host_bw += (stretch[:, None] * share).sum(axis=0)
     bandwidth_ns = float(per_switch_bw.sum())
 
     return DelayBreakdown(
@@ -210,6 +302,9 @@ def analyze_ref(
         per_pool_lat,
         per_switch_cong,
         per_switch_bw,
+        per_host_lat,
+        per_host_cong,
+        per_host_bw,
     )
 
 
@@ -231,12 +326,16 @@ def plan_cascade(flat: FlatTopology):
     exactly one.  Falls back to the conservative merge-every-stage plan when
     the needed masks exceed the 31 bits of an int32 route word.
 
-    Returns ``(bits_pool [P] int32, merge_plan | None, stage_order tuple)``
+    Returns ``(bits_pool [V] int32, merge_plan | None, stage_order tuple)``
     where bit ``k`` of an event's route word marks membership in the pool
     set ``k`` (the first ``S`` bits are the stage masks, in stage order).
+    Rows are **virtual pools** — one per (host, pool) pair — so a shared
+    switch's stage mask spans every host that routes through it while each
+    host's RC stage covers only that host's rows; with ``n_hosts == 1``
+    virtual and physical pools coincide.
     """
     route = np.asarray(flat.route)
-    P = flat.n_pools
+    P = route.shape[0]  # virtual (host, pool) rows
     stage_order = tuple(int(s) for s in flat.stage_order())
     masks = [
         frozenset(int(p) for p in np.nonzero(route[:, s] > 0)[0]) for s in stage_order
@@ -279,7 +378,12 @@ def plan_cascade(flat: FlatTopology):
     else:
         merge_plan = tuple(plan)
     if len(sets) > 31:
-        raise ValueError(f"{len(sets)} switch stages exceed the 31-bit route word")
+        raise ValueError(
+            f"{len(sets)} cascade stages exceed the 31-bit route word "
+            f"(every switch plus one RC pseudo-switch per host is a stage; "
+            f"this topology has {flat.n_hosts} hosts) — use "
+            f"EpochAnalyzer, which falls back to the unfused path here"
+        )
     bits_pool = np.zeros((P,), np.int32)
     for k, pool_set in enumerate(sets):
         for p in pool_set:
@@ -293,15 +397,17 @@ def _analyze_jax(
     pool: jnp.ndarray,  # [N] i32 (padded entries: 0)
     nbytes: jnp.ndarray,  # [N] f32 (padded entries: 0)
     weight: jnp.ndarray,  # [N] f32 statistical multiplicity
+    host: jnp.ndarray,  # [N] i32 attached-host index (padded entries: 0)
     valid: jnp.ndarray,  # [N] bool
-    bits_table: jnp.ndarray,  # [P] i32 per-pool route word (plan_cascade)
-    pool_latency_ns: jnp.ndarray,  # [P]
+    bits_table: jnp.ndarray,  # [V] i32 per-virtual-pool route word (plan_cascade)
+    pool_latency_ns: jnp.ndarray,  # [V] (V = n_hosts * n_pools)
     local_latency_ns: jnp.ndarray,  # []
-    route: jnp.ndarray,  # [P, S]
+    route: jnp.ndarray,  # [V, S]
     switch_stt_ns: jnp.ndarray,  # [S]
     switch_bw: jnp.ndarray,  # [S] bytes/ns
     stage_order: Tuple[int, ...],  # static
     n_windows: int,  # static
+    n_hosts: int,  # static
     bw_window_ns: jnp.ndarray,  # []
     impl: str = "inline",  # 'inline' | 'pallas' | 'pallas_interpret'
     fused: bool = True,  # False: legacy per-stage argsort loop (benchmarks)
@@ -311,13 +417,22 @@ def _analyze_jax(
     the events were staged time-sorted with padding at the tail (the
     :class:`~repro.core.events.EventStager` contract — the epoch's one
     stable sort happens host-side during staging, and only when the trace
-    isn't already sorted)."""
-    P = pool_latency_ns.shape[0]
+    isn't already sorted).
+
+    Multi-host fabrics (``n_hosts > 1``, a static branch): every lookup is
+    keyed by the virtual pool ``vp = host * P + pool`` so shared switches
+    see the merged timeline while per-host RCs stay private, and each delay
+    class is additionally host-segmented on device.  The ``n_hosts == 1``
+    graph is exactly the historical single-host one.
+    """
+    V = pool_latency_ns.shape[0]
+    P = V // n_hosts  # physical pools
     S = switch_stt_ns.shape[0]
     f32 = t.dtype
+    vp = pool if n_hosts == 1 else host * P + pool
 
     # -- latency ----------------------------------------------------------- #
-    per_event_lat = jnp.maximum(pool_latency_ns[pool] - local_latency_ns, 0.0) * weight
+    per_event_lat = jnp.maximum(pool_latency_ns[vp] - local_latency_ns, 0.0) * weight
     per_event_lat = jnp.where(valid, per_event_lat, 0.0)
     if fused:
         # one-hot contraction: XLA CPU scatter-add (segment_sum) costs ~10x
@@ -327,6 +442,11 @@ def _analyze_jax(
     else:
         per_pool_lat = jax.ops.segment_sum(per_event_lat, pool, num_segments=P)
     latency = per_event_lat.sum()
+    if n_hosts == 1:
+        per_host_lat = latency[None]
+    else:
+        host_onehot = (host[:, None] == jnp.arange(n_hosts, dtype=host.dtype)).astype(f32)
+        per_host_lat = jnp.einsum("n,nh->h", per_event_lat, host_onehot)
 
     big = jnp.asarray(jnp.finfo(f32).max / 4, f32)
     t_cur = jnp.where(valid, t, big)
@@ -336,15 +456,25 @@ def _analyze_jax(
         from repro.kernels import ops as kops  # deferred: avoid cycles
 
         stage_arr = jnp.asarray(stage_order, jnp.int32)
-        ev_bits = jnp.where(valid, bits_table[pool], 0)
+        ev_bits = jnp.where(valid, bits_table[vp], 0)
         t_fin, slot_idx, psd = kops.congestion_cascade(
             t_cur,
             ev_bits,
             switch_stt_ns[stage_arr],
             impl="ref" if impl == "inline" else impl,
             merge_plan=merge_plan,
+            hosts=None if n_hosts == 1 else host,
+            n_hosts=n_hosts,
         )
-        per_switch_cong = jnp.zeros((S,), f32).at[stage_arr].set(psd)
+        if n_hosts == 1:
+            per_switch_cong = jnp.zeros((S,), f32).at[stage_arr].set(psd)
+            congestion = per_switch_cong.sum()
+            per_host_cong = congestion[None]
+        else:
+            # psd is [S_stages, H]: host-segmented per-stage queueing delay
+            per_switch_cong = jnp.zeros((S,), f32).at[stage_arr].set(psd.sum(axis=1))
+            per_host_cong = psd.sum(axis=0)
+            congestion = per_switch_cong.sum()
         # the Pallas kernel always runs the conservative merge schedule, so
         # its slot order never matches input order
         has_merges = impl != "inline" or merge_plan is None or any(
@@ -354,29 +484,35 @@ def _analyze_jax(
             # bandwidth runs in final slot order; gather payloads through
             # the cascade's permutation (slot k held input event slot_idx[k])
             lat_e = per_event_lat[slot_idx]
-            pool_e, nbytes_e = pool[slot_idx], nbytes[slot_idx]
+            vp_e, nbytes_e = vp[slot_idx], nbytes[slot_idx]
             valid_e = valid[slot_idx]
         else:
             # no merges scheduled: slot order == input order, skip gathers
-            lat_e, pool_e, nbytes_e, valid_e = per_event_lat, pool, nbytes, valid
-        congestion = per_switch_cong.sum()
-
-        # -- bandwidth: one segment-sum over (window, pool), then a tiny
-        #    [W, P] @ [P, S] matmul distributes pools onto switches --------- #
+            lat_e, vp_e, nbytes_e, valid_e = per_event_lat, vp, nbytes, valid
+        # -- bandwidth: one segment-sum over (window, vpool), then a tiny
+        #    [W, V] @ [V, S] matmul distributes virtual pools onto switches - #
         t_obs = jnp.where(valid_e, t_fin + lat_e, 0.0)
         win = jnp.minimum((t_obs / bw_window_ns).astype(jnp.int32), n_windows - 1)
         win = jnp.where(valid_e, win, n_windows - 1)
-        key = win * P + pool_e
+        key = win * V + vp_e
         wp = jax.ops.segment_sum(
-            jnp.where(valid_e, nbytes_e, 0.0), key, num_segments=n_windows * P
-        ).reshape(n_windows, P)
-        wbytes = wp @ route  # [W, S]
+            jnp.where(valid_e, nbytes_e, 0.0), key, num_segments=n_windows * V
+        ).reshape(n_windows, V)
+        if n_hosts == 1:
+            wbytes = wp @ route  # [W, S]
+            wbytes_h = None
+        else:
+            wph = wp.reshape(n_windows, n_hosts, P)
+            route_h = route.reshape(n_hosts, P, S)
+            wbytes_h = jnp.einsum("whp,hps->whs", wph, route_h)  # [W, H, S]
+            wbytes = wbytes_h.sum(axis=1)
     else:
         # -- congestion: legacy per-stage argsort loop (seed baseline) ------ #
         per_switch_list = [jnp.zeros((), f32)] * S
+        per_host_cong = jnp.zeros((n_hosts,), f32)
         for s in stage_order:
             stt = switch_stt_ns[s]
-            mask = (route[pool, s] > 0) & valid
+            mask = (route[vp, s] > 0) & valid
             order = jnp.argsort(t_cur, stable=True)
             t_sorted = t_cur[order]
             m_sorted = mask[order]
@@ -393,22 +529,45 @@ def _analyze_jax(
                 start, delay = kops.congestion_queue(t_sorted, m_sorted, stt, impl=impl)
             t_cur = t_cur.at[order].set(jnp.where(m_sorted, start, t_sorted))
             per_switch_list[s] = delay.sum()
+            if n_hosts > 1:
+                per_host_cong = per_host_cong + jax.ops.segment_sum(
+                    delay, host[order], num_segments=n_hosts
+                )
         per_switch_cong = jnp.stack(per_switch_list)
         congestion = per_switch_cong.sum()
+        if n_hosts == 1:
+            per_host_cong = congestion[None]
 
         # -- bandwidth: windowed stretch (seed formulation) ----------------- #
         t_obs = jnp.where(valid, t_cur + per_event_lat, 0.0)
         win = jnp.minimum((t_obs / bw_window_ns).astype(jnp.int32), n_windows - 1)
         win = jnp.where(valid, win, n_windows - 1)
-        traversed = route[pool, :] * valid[:, None].astype(f32)  # [N, S]
+        traversed = route[vp, :] * valid[:, None].astype(f32)  # [N, S]
         contrib = traversed * nbytes[:, None]  # [N, S]
         wbytes = jax.ops.segment_sum(contrib, win, num_segments=n_windows)  # [W, S]
+        if n_hosts == 1:
+            wbytes_h = None
+        else:
+            key = win * n_hosts + host
+            wbytes_h = jax.ops.segment_sum(
+                contrib, key, num_segments=n_windows * n_hosts
+            ).reshape(n_windows, n_hosts, S)
 
     stretch = jnp.maximum(wbytes / switch_bw[None, :] - bw_window_ns, 0.0)
     per_switch_bw_d = stretch.sum(axis=0)
     bandwidth = per_switch_bw_d.sum()
+    if n_hosts == 1:
+        per_host_bw = bandwidth[None]
+    else:
+        # window stretch attributed to hosts by their byte share in the window
+        denom = jnp.maximum(wbytes, jnp.asarray(1e-30, f32))
+        per_host_bw = jnp.einsum("ws,whs->h", stretch / denom, wbytes_h)
 
-    return latency, congestion, bandwidth, per_pool_lat, per_switch_cong, per_switch_bw_d
+    return (
+        latency, congestion, bandwidth,
+        per_pool_lat, per_switch_cong, per_switch_bw_d,
+        per_host_lat, per_host_cong, per_host_bw,
+    )
 
 
 def _analyze_batch_jax(
@@ -416,9 +575,10 @@ def _analyze_batch_jax(
     pool: jnp.ndarray,  # [B, N]
     nbytes: jnp.ndarray,  # [B, N]
     weight: jnp.ndarray,  # [B, N]
+    host: jnp.ndarray,  # [B, N]
     valid: jnp.ndarray,  # [B, N]
     bw_window_ns: jnp.ndarray,  # [B] per-epoch window length
-    bits_table: jnp.ndarray,  # [P]
+    bits_table: jnp.ndarray,  # [V]
     pool_latency_ns: jnp.ndarray,
     local_latency_ns: jnp.ndarray,
     route: jnp.ndarray,
@@ -426,6 +586,7 @@ def _analyze_batch_jax(
     switch_bw: jnp.ndarray,
     stage_order: Tuple[int, ...],
     n_windows: int,
+    n_hosts: int,
     impl: str = "inline",
     fused: bool = True,
     merge_plan=None,
@@ -438,15 +599,15 @@ def _analyze_batch_jax(
     single small transfer per batch.
     """
 
-    def one(t1, pool1, nbytes1, weight1, valid1, bww1):
+    def one(t1, pool1, nbytes1, weight1, host1, valid1, bww1):
         return _analyze_jax(
-            t1, pool1, nbytes1, weight1, valid1, bits_table,
+            t1, pool1, nbytes1, weight1, host1, valid1, bits_table,
             pool_latency_ns, local_latency_ns, route, switch_stt_ns, switch_bw,
-            stage_order=stage_order, n_windows=n_windows, bw_window_ns=bww1,
-            impl=impl, fused=fused, merge_plan=merge_plan,
+            stage_order=stage_order, n_windows=n_windows, n_hosts=n_hosts,
+            bw_window_ns=bww1, impl=impl, fused=fused, merge_plan=merge_plan,
         )
 
-    xs = (t, pool, nbytes, weight, valid, bw_window_ns)
+    xs = (t, pool, nbytes, weight, host, valid, bw_window_ns)
     if impl in ("pallas", "pallas_interpret"):
         outs = jax.lax.map(lambda args: one(*args), xs)
     else:
@@ -488,12 +649,24 @@ class EpochAnalyzer:
         self._bw = jnp.asarray(flat.switch_bandwidth_gbps, dtype)
         self.impl = impl
         self.fused = bool(fused)
-        bits_pool, self._merge_plan, self._stage_order = plan_cascade(flat)
+        if self.fused and flat.n_switches > 31:
+            # the fused cascade encodes one stage per switch (incl. per-host
+            # RCs) in a 31-bit route word; very wide fabrics fall back to
+            # the legacy per-stage loop — slower, but any host count works
+            self.fused = False
+        if self.fused:
+            bits_pool, self._merge_plan, self._stage_order = plan_cascade(flat)
+        else:
+            bits_pool = np.zeros((flat.route.shape[0],), np.int32)
+            self._merge_plan = None
+            self._stage_order = tuple(int(s) for s in flat.stage_order())
         self._bits_table = jnp.asarray(bits_pool)
         self._stager = EventStager(np.dtype(jnp.dtype(dtype).name))
         self._batch_fn = jax.jit(
             _analyze_batch_jax,
-            static_argnames=("stage_order", "n_windows", "impl", "fused", "merge_plan"),
+            static_argnames=(
+                "stage_order", "n_windows", "n_hosts", "impl", "fused", "merge_plan",
+            ),
         )
 
     @staticmethod
@@ -509,9 +682,12 @@ class EpochAnalyzer:
     def analyze_batch(self, traces: Sequence[MemEvents]) -> DelayBreakdown:
         """Analyze B epochs in one device dispatch; returns summed totals."""
         P, S = self.flat.n_pools, self.flat.n_switches
+        H = self.flat.n_hosts
         traces = [tr for tr in traces if tr.n]
         if not traces:
-            return DelayBreakdown.zero(P, S)
+            return DelayBreakdown.zero(P, S, H)
+        for tr in traces:
+            _check_reachable(self.flat, tr)
         n_bucket = self._bucket(max(tr.n for tr in traces))
         b_bucket = self._bucket(len(traces), floor=1)
         buf = self._stager.stage(traces, b_bucket, n_bucket)
@@ -523,6 +699,7 @@ class EpochAnalyzer:
             jnp.asarray(buf["pool"]),
             jnp.asarray(buf["bytes"]),
             jnp.asarray(buf["weight"]),
+            jnp.asarray(buf["host"]),
             jnp.asarray(buf["valid"]),
             jnp.asarray(bw_window, self.dtype),
             self._bits_table,
@@ -533,12 +710,13 @@ class EpochAnalyzer:
             self._bw,
             stage_order=self._stage_order,
             n_windows=self.n_windows,
+            n_hosts=H,
             impl=self.impl,
             fused=self.fused,
             merge_plan=self._merge_plan,
         )
         # the single host-boundary crossing for the whole batch
-        lat, cong, bw, ppl, psc, psb = jax.device_get(out)
+        lat, cong, bw, ppl, psc, psb, phl, phc, phb = jax.device_get(out)
         return DelayBreakdown(
             float(lat),
             float(cong),
@@ -546,6 +724,9 @@ class EpochAnalyzer:
             ppl.astype(np.float64),
             psc.astype(np.float64),
             psb.astype(np.float64),
+            phl.astype(np.float64),
+            phc.astype(np.float64),
+            phb.astype(np.float64),
         )
 
 
@@ -572,27 +753,36 @@ class FineGrainedSimulator:
             raise ValueError(bandwidth_mode)
         self.flat = flat
         self.bandwidth_mode = bandwidth_mode
-        # per-pool switch path, deepest first (same order the analyzer stages)
+        # per-(host, pool) switch path, deepest first (the analyzer's stage
+        # order); shared switches appear in several hosts' paths, private RCs
+        # in exactly one — the same contention structure the epoch analyzer
+        # derives from the virtual-pool route matrix
         order = list(flat.stage_order())
         self._paths: List[List[int]] = []
-        for p in range(flat.n_pools):
-            self._paths.append([s for s in order if flat.route[p, s] > 0])
+        for v in range(flat.route.shape[0]):
+            self._paths.append([s for s in order if flat.route[v, s] > 0])
 
     def simulate(self, events: MemEvents) -> DelayBreakdown:
         flat = self.flat
-        P, S = flat.n_pools, flat.n_switches
+        P, S, H = flat.n_pools, flat.n_switches, flat.n_hosts
         if events.n == 0:
-            return DelayBreakdown.zero(P, S)
+            return DelayBreakdown.zero(P, S, H)
+        _check_reachable(flat, events)
         ev = events.sorted_by_time()
         pool = ev.pool.astype(np.int64)
+        hostv = ev.host.astype(np.int64)
+        vpool = hostv * P + pool
         per_event_lat = np.maximum(
-            flat.pool_latency_ns[pool] - flat.local_latency_ns, 0.0
+            flat.pool_latency_ns[vpool] - flat.local_latency_ns, 0.0
         ) * ev.weight
         per_pool_lat = np.bincount(pool, weights=per_event_lat, minlength=P)[:P]
+        per_host_lat = np.bincount(hostv, weights=per_event_lat, minlength=H)[:H]
 
         next_free = np.zeros((S,), np.float64)
         per_switch_cong = np.zeros((S,), np.float64)
         per_switch_bw = np.zeros((S,), np.float64)
+        per_host_cong = np.zeros((H,), np.float64)
+        per_host_bw = np.zeros((H,), np.float64)
         # priority queue of (time, seq, event_idx, stage_pos); ``ev`` is
         # time-sorted, so the seed list already satisfies the heap invariant
         # — one O(n) pass instead of n heappushes.
@@ -602,7 +792,7 @@ class FineGrainedSimulator:
         seq = ev.n
         while heap:
             t_arr, _, i, stage = heapq.heappop(heap)
-            path = self._paths[pool[i]]
+            path = self._paths[vpool[i]]
             if stage >= len(path):
                 continue
             s = path[stage]
@@ -615,8 +805,10 @@ class FineGrainedSimulator:
             start = max(t_arr, next_free[s])
             next_free[s] = start + service
             per_switch_cong[s] += start - t_arr  # queueing delay
+            per_host_cong[hostv[i]] += start - t_arr
             if self.bandwidth_mode == "per_txn" and service > stt:
                 per_switch_bw[s] += service - stt
+                per_host_bw[hostv[i]] += service - stt
             heapq.heappush(heap, (start + service if self.bandwidth_mode == "per_txn" else start, seq, i, stage + 1))
             seq += 1
 
@@ -627,4 +819,7 @@ class FineGrainedSimulator:
             per_pool_lat,
             per_switch_cong,
             per_switch_bw,
+            per_host_lat,
+            per_host_cong,
+            per_host_bw,
         )

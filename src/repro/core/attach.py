@@ -28,6 +28,12 @@ Two clocks are reported:
 plus the per-component delay decomposition, per-pool/switch, per-epoch.
 ``analyzer_s`` stays the analyzer's own compute seconds (the paper's
 overhead accounting) whether or not it overlapped native execution.
+
+This module attaches **one** program to a private topology.  To co-attach
+several programs on one shared fabric — cross-host contention at shared
+switches, trace-driven coherency — use
+:class:`repro.core.fabric.FabricSession`, which composes the same tracer /
+timer / analyzer stack over a merged multi-host timeline.
 """
 
 from __future__ import annotations

@@ -33,6 +33,8 @@ __all__ = [
     "Region",
     "RegionMap",
     "concat_events",
+    "merge_host_traces",
+    "split_by_host",
     "synthetic_trace",
 ]
 
@@ -54,6 +56,11 @@ class MemEvents:
       region:  [N] int32 region id (for migration/hotness accounting).
       weight:  [N] statistical multiplicity (1.0 exact; 1/rate under PEBS-style
                sampling so count-proportional delays stay unbiased).
+      host:    [N] int32 attached-host index (0 for single-host simulation).
+               In a shared-fabric session events from several hosts are merged
+               onto one timeline; the analyzer routes each event through its
+               (host, pool) pair so contention appears only at shared
+               components.
     """
 
     t_ns: np.ndarray
@@ -62,12 +69,15 @@ class MemEvents:
     is_write: np.ndarray
     region: np.ndarray
     weight: np.ndarray = None  # type: ignore[assignment]
+    host: np.ndarray = None  # type: ignore[assignment]
 
     def __post_init__(self):
         if self.weight is None:
             object.__setattr__(self, "weight", np.ones((len(self.t_ns),), np.float64))
+        if self.host is None:
+            object.__setattr__(self, "host", np.zeros((len(self.t_ns),), np.int32))
         n = len(self.t_ns)
-        for f in ("pool", "bytes_", "is_write", "region", "weight"):
+        for f in ("pool", "bytes_", "is_write", "region", "weight", "host"):
             if len(getattr(self, f)) != n:
                 raise ValueError(f"field {f} length mismatch")
 
@@ -91,6 +101,13 @@ class MemEvents:
             is_write=self.is_write[idx],
             region=self.region[idx],
             weight=self.weight[idx],
+            host=self.host[idx],
+        )
+
+    def with_host(self, host: int) -> "MemEvents":
+        """Copy with every event tagged as issued by ``host``."""
+        return dataclasses.replace(
+            self, host=np.full((self.n,), int(host), np.int32)
         )
 
     def sample(self, rate: float, seed: int = 0) -> "MemEvents":
@@ -104,13 +121,8 @@ class MemEvents:
         rng = np.random.default_rng(seed)
         keep = rng.random(self.n) < rate
         out = self.take(np.nonzero(keep)[0])
-        return MemEvents(
-            t_ns=out.t_ns,
-            pool=out.pool,
-            bytes_=out.bytes_ / rate,
-            is_write=out.is_write,
-            region=out.region,
-            weight=out.weight / rate,
+        return dataclasses.replace(
+            out, bytes_=out.bytes_ / rate, weight=out.weight / rate
         )
 
     @staticmethod
@@ -131,6 +143,7 @@ class MemEvents:
         bytes_: Iterable[float],
         is_write: Optional[Iterable[bool]] = None,
         region: Optional[Iterable[int]] = None,
+        host: Optional[Iterable[int]] = None,
     ) -> "MemEvents":
         t = np.asarray(list(t_ns), np.float64)
         p = np.asarray(list(pool), np.int32)
@@ -145,7 +158,12 @@ class MemEvents:
             if region is not None
             else np.zeros(len(t), np.int32)
         )
-        return MemEvents(t, p, b, w, r)
+        h = (
+            np.asarray(list(host), np.int32)
+            if host is not None
+            else np.zeros(len(t), np.int32)
+        )
+        return MemEvents(t, p, b, w, r, host=h)
 
 
 def concat_events(traces: Sequence[MemEvents]) -> MemEvents:
@@ -159,7 +177,32 @@ def concat_events(traces: Sequence[MemEvents]) -> MemEvents:
         is_write=np.concatenate([t.is_write for t in traces]),
         region=np.concatenate([t.region for t in traces]),
         weight=np.concatenate([t.weight for t in traces]),
+        host=np.concatenate([t.host for t in traces]),
     )
+
+
+def merge_host_traces(
+    traces: Sequence[MemEvents],
+    hosts: Optional[Sequence[int]] = None,
+) -> MemEvents:
+    """Merge per-host epoch traces onto one shared fabric timeline.
+
+    ``traces[i]`` is tagged with host ``hosts[i]`` (default: index ``i``) and
+    the union is returned time-sorted, which is exactly the analyzer's staging
+    contract: co-scheduled epochs start at the same fabric instant, so their
+    epoch-relative times are directly comparable.
+    """
+    if hosts is None:
+        hosts = range(len(traces))
+    tagged = [tr.with_host(h) for tr, h in zip(traces, hosts)]
+    return concat_events(tagged).sorted_by_time()
+
+
+def split_by_host(trace: MemEvents, n_hosts: int) -> List[MemEvents]:
+    """Inverse of :func:`merge_host_traces`: per-host sub-traces, order kept."""
+    return [
+        trace.take(np.nonzero(trace.host == h)[0]) for h in range(int(n_hosts))
+    ]
 
 
 # --------------------------------------------------------------------------- #
@@ -195,6 +238,7 @@ class EventStager:
                 "pool": np.zeros((b_bucket, n_bucket), np.int32),
                 "bytes": np.zeros((b_bucket, n_bucket), self.time_dtype),
                 "weight": np.zeros((b_bucket, n_bucket), self.time_dtype),
+                "host": np.zeros((b_bucket, n_bucket), np.int32),
                 "valid": np.zeros((b_bucket, n_bucket), bool),
                 "span": np.zeros((b_bucket,), np.float64),
             }
@@ -222,16 +266,20 @@ class EventStager:
             n = ev.n if ev is not None else 0
             if n:
                 if np.all(ev.t_ns[1:] >= ev.t_ns[:-1]):
-                    t, pool, nbytes, weight = ev.t_ns, ev.pool, ev.bytes_, ev.weight
+                    t, pool, nbytes, weight, host = (
+                        ev.t_ns, ev.pool, ev.bytes_, ev.weight, ev.host
+                    )
                 else:
                     order = np.argsort(ev.t_ns, kind="stable")
-                    t, pool, nbytes, weight = (
-                        ev.t_ns[order], ev.pool[order], ev.bytes_[order], ev.weight[order]
+                    t, pool, nbytes, weight, host = (
+                        ev.t_ns[order], ev.pool[order], ev.bytes_[order],
+                        ev.weight[order], ev.host[order],
                     )
                 buf["t"][row, :n] = t
                 buf["pool"][row, :n] = pool
                 buf["bytes"][row, :n] = nbytes
                 buf["weight"][row, :n] = weight
+                buf["host"][row, :n] = host
                 buf["valid"][row, :n] = True
                 buf["span"][row] = float(t[-1]) + 1.0
             else:
@@ -240,6 +288,7 @@ class EventStager:
             buf["pool"][row, n:] = 0
             buf["bytes"][row, n:] = 0.0
             buf["weight"][row, n:] = 0.0
+            buf["host"][row, n:] = 0
             buf["valid"][row, n:] = False
         return buf
 

@@ -37,31 +37,45 @@ class EpochSchedule:
         if self.quantum_ns <= 0:
             raise ValueError("quantum_ns must be positive")
 
-    def slices(self, trace: MemEvents) -> List[MemEvents]:
+    def slices(self, trace: MemEvents, dense: bool = False) -> List[MemEvents]:
         """Cut one step's trace into epoch slices (times re-based per slice)."""
         if self.mode in ("step", "layer"):
             # 'layer' slicing is done upstream by the tracer (it knows layer
             # boundaries); at this point each trace is already one epoch.
             return [trace]
-        return slice_by_quantum(trace, self.quantum_ns)
+        return slice_by_quantum(trace, self.quantum_ns, dense=dense)
 
 
-def slice_by_quantum(trace: MemEvents, quantum_ns: float) -> List[MemEvents]:
+def slice_by_quantum(
+    trace: MemEvents, quantum_ns: float, dense: bool = False
+) -> List[MemEvents]:
+    """Cut a trace on fixed simulated-time quanta.
+
+    By default idle quanta are dropped (the single-host attach behavior:
+    only occupied epochs are analyzed).  With ``dense=True`` the returned
+    list covers every quantum from 0 through the last occupied one, empty
+    slices included, so index ``k`` always means *absolute* quantum ``k`` —
+    required when several hosts' slice streams are aligned positionally
+    (the fabric session's co-scheduling contract).
+    """
     if trace.n == 0:
         return []
     ev = trace.sorted_by_time()
     out: List[MemEvents] = []
     k = np.floor(ev.t_ns / quantum_ns).astype(np.int64)
-    for q in np.unique(k):
-        idx = np.nonzero(k == q)[0]
+    if dense:
+        # k is non-decreasing (ev is time-sorted): all slice boundaries in
+        # one O(N + Q) searchsorted instead of one array scan per quantum
+        qmax = int(k[-1])
+        bounds = np.searchsorted(k, np.arange(qmax + 2))
+        groups = [
+            (q, np.arange(bounds[q], bounds[q + 1])) for q in range(qmax + 1)
+        ]
+    else:
+        groups = [(int(q), np.nonzero(k == q)[0]) for q in np.unique(k)]
+    for q, idx in groups:
         sl = ev.take(idx)
-        out.append(
-            MemEvents(
-                t_ns=sl.t_ns - q * quantum_ns,  # re-base to epoch start
-                pool=sl.pool,
-                bytes_=sl.bytes_,
-                is_write=sl.is_write,
-                region=sl.region,
-            )
-        )
+        # re-base times to the slice's epoch start; every other field —
+        # including PEBS-style sampling weights and host tags — rides along
+        out.append(dataclasses.replace(sl, t_ns=sl.t_ns - q * quantum_ns))
     return out

@@ -12,12 +12,22 @@ component is annotated with the paper's three quantities:
 
 ``FlatTopology`` lowers the tree to dense arrays so the timing analyzer
 (:mod:`repro.core.analyzer`) can be vectorized / jitted.
+
+**Multi-host fabrics** (the paper's pooling scenario): a topology may declare
+``n_hosts`` attached servers.  Switches and expanders are *shared* fabric
+components; each host brings its own private Root Complex (and its own local
+DRAM — pool 0 is per-host private, so local traffic never crosses hosts).
+The lowering emits one route row per ``(host, pool)`` pair: two hosts
+reaching the same expander share every switch row on its path — which is
+what creates cross-host contention — but each traverses its *own* RC row.
+``host_ports`` restricts which top-level components a host's RC is cabled
+to, modelling partial fabrics (a host that cannot see an expander at all).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -28,6 +38,7 @@ __all__ = [
     "FlatTopology",
     "figure1_topology",
     "local_only_topology",
+    "pooled_topology",
     "two_tier_topology",
 ]
 
@@ -70,6 +81,8 @@ class Topology:
         rc_bandwidth_gbps: float = 256.0,
         rc_stt_ns: float = 0.5,
         local_dram_latency_ns: float = 88.9,  # paper's measured platform latency
+        n_hosts: int = 1,
+        host_ports: Optional[Mapping[int, Sequence[str]]] = None,
     ):
         self.pools: List[Pool] = list(pools)
         self.switches: List[Switch] = list(switches)
@@ -77,6 +90,12 @@ class Topology:
         self.rc_bandwidth_gbps = float(rc_bandwidth_gbps)
         self.rc_stt_ns = float(rc_stt_ns)
         self.local_dram_latency_ns = float(local_dram_latency_ns)
+        self.n_hosts = int(n_hosts)
+        # host -> top-level component names (parentless switches/pools) the
+        # host's RC is attached to; hosts absent from the map see everything
+        self.host_ports: Dict[int, Tuple[str, ...]] = {
+            int(h): tuple(names) for h, names in (host_ports or {}).items()
+        }
         self._switch_by_name: Dict[str, Switch] = {s.name: s for s in self.switches}
         self._pool_index: Dict[str, int] = {p.name: i for i, p in enumerate(self.pools)}
         self.validate()
@@ -110,8 +129,40 @@ class Topology:
                     raise ValueError(f"cycle through switch {cur}")
                 seen.add(cur)
                 cur = self._switch_by_name[cur].parent
+        if self.n_hosts < 1:
+            raise ValueError("n_hosts must be >= 1")
+        top_level = {s.name for s in self.switches if s.parent is None} | {
+            p.name for p in self.pools if p.parent is None and not p.is_local
+        }
+        for h, names in self.host_ports.items():
+            if not (0 <= h < self.n_hosts):
+                raise ValueError(f"host_ports host {h} out of range [0, {self.n_hosts})")
+            for name in names:
+                if name not in top_level:
+                    raise ValueError(
+                        f"host {h} port {name!r} is not a top-level component"
+                    )
 
     # ------------------------------------------------------------------ #
+
+    def host_reaches(self, host: int, pool: Pool) -> bool:
+        """Whether ``host``'s RC has a fabric path to ``pool``.
+
+        Local DRAM is always reachable (it is the host's own).  Remote pools
+        are reachable iff the top-level component of their path is among the
+        host's declared ports (all of them when the host declares none).
+        """
+        if pool.is_local:
+            return True
+        ports = self.host_ports.get(int(host))
+        if ports is None:
+            return True
+        top = pool.name
+        cur = pool.parent
+        while cur is not None:
+            top = cur
+            cur = self._switch_by_name[cur].parent
+        return top in ports
 
     def pool_index(self, name: str) -> int:
         return self._pool_index[name]
@@ -152,8 +203,10 @@ class Topology:
         return FlatTopology.from_topology(self)
 
     def describe(self) -> str:
+        hosts = "" if self.n_hosts == 1 else f", {self.n_hosts} hosts"
         lines = [
-            f"Topology: {len(self.pools)} pools, {len(self.switches)} switches "
+            f"Topology: {len(self.pools)} pools, {len(self.switches)} switches"
+            f"{hosts} "
             f"(RC lat={self.rc_latency_ns}ns bw={self.rc_bandwidth_gbps}GB/s "
             f"stt={self.rc_stt_ns}ns; local DRAM lat={self.local_dram_latency_ns}ns)"
         ]
@@ -176,17 +229,26 @@ class Topology:
 class FlatTopology:
     """Dense-array lowering of a :class:`Topology` for the analyzer.
 
-    Switch index S-1 is always the RC (remote accesses traverse it); switch
-    arrays therefore have ``n_switches + 1`` entries.
+    The analyzer routes each event through its **virtual pool**
+    ``vp = host * n_pools + pool``: route/latency/bandwidth arrays have one
+    row per (host, pool) pair.  Shared fabric switches keep one row each —
+    every host's traffic lands on the same row, which is where cross-host
+    contention comes from — while each host gets a private RC pseudo-switch.
+    Switch arrays therefore have ``n_switches + n_hosts`` entries, host
+    ``h``'s RC at index ``n_switches + h``.
+
+    With ``n_hosts == 1`` every array is bit-identical to the historical
+    single-host lowering (one RC, ``route`` is ``[P, S]``), so all existing
+    single-host consumers and oracles are unchanged.
     """
 
-    n_pools: int
-    n_switches: int  # including the RC pseudo-switch (last index)
-    pool_latency_ns: np.ndarray  # [P] total added latency per access
-    pool_bandwidth_gbps: np.ndarray  # [P] bottleneck bandwidth on path
-    pool_capacity: np.ndarray  # [P] bytes
+    n_pools: int  # physical pools (per host)
+    n_switches: int  # shared switches + one RC pseudo-switch per host
+    pool_latency_ns: np.ndarray  # [H*P] total added latency per access
+    pool_bandwidth_gbps: np.ndarray  # [H*P] bottleneck bandwidth on path
+    pool_capacity: np.ndarray  # [P] bytes (physical device capacity)
     local_latency_ns: float
-    # route[P, S] == 1 iff accesses to pool P traverse switch S
+    # route[H*P, S] == 1 iff accesses by host H to pool P traverse switch S
     route: np.ndarray
     switch_stt_ns: np.ndarray  # [S]
     switch_bandwidth_gbps: np.ndarray  # [S]
@@ -197,31 +259,54 @@ class FlatTopology:
     switch_depth: np.ndarray
     pool_names: Tuple[str, ...]
     switch_names: Tuple[str, ...]
+    n_hosts: int = 1
+    # host_reachable[H, P]: False where the host's ports exclude the pool
+    host_reachable: Optional[np.ndarray] = None
+
+    @property
+    def n_vpools(self) -> int:
+        """Virtual (host, pool) row count of ``route`` / latency tables."""
+        return self.n_hosts * self.n_pools
+
+    def vp_index(self, host: int, pool: int) -> int:
+        return int(host) * self.n_pools + int(pool)
 
     def stage_order(self) -> np.ndarray:
-        """Switch indices ordered deepest-first (RC last)."""
+        """Switch indices ordered deepest-first (RCs last)."""
         return np.argsort(-self.switch_depth, kind="stable")
 
     @staticmethod
     def from_topology(t: Topology) -> "FlatTopology":
         P = len(t.pools)
-        S = len(t.switches) + 1  # + RC
-        pool_lat = np.zeros((P,), np.float64)
-        pool_bw = np.zeros((P,), np.float64)
+        H = t.n_hosts
+        n_sw = len(t.switches)
+        S = n_sw + H  # + one RC pseudo-switch per host
+        pool_lat = np.zeros((H * P,), np.float64)
+        pool_bw = np.zeros((H * P,), np.float64)
         pool_cap = np.zeros((P,), np.float64)
-        route = np.zeros((P, S), np.float64)
+        route = np.zeros((H * P, S), np.float64)
+        reach = np.ones((H, P), bool)
         sw_index = {s.name: i for i, s in enumerate(t.switches)}
         for i, p in enumerate(t.pools):
-            pool_lat[i] = t.pool_total_latency_ns(p)
-            pool_bw[i] = t.pool_path_bandwidth_gbps(p)
             pool_cap[i] = p.capacity_bytes
-            if not p.is_local:
-                route[i, S - 1] = 1.0  # RC
+            for h in range(H):
+                vp = h * P + i
+                pool_lat[vp] = t.pool_total_latency_ns(p)
+                pool_bw[vp] = t.pool_path_bandwidth_gbps(p)
+                if p.is_local:
+                    continue
+                if not t.host_reaches(h, p):
+                    reach[h, i] = False
+                    continue  # no route: the host's ports exclude this pool
+                route[vp, n_sw + h] = 1.0  # the host's private RC
                 for sw in t.switch_path(p):
-                    route[i, sw_index[sw.name]] = 1.0
-        stt = np.array([s.stt_ns for s in t.switches] + [t.rc_stt_ns], np.float64)
+                    route[vp, sw_index[sw.name]] = 1.0
+        stt = np.array(
+            [s.stt_ns for s in t.switches] + [t.rc_stt_ns] * H, np.float64
+        )
         sw_bw = np.array(
-            [s.bandwidth_gbps for s in t.switches] + [t.rc_bandwidth_gbps], np.float64
+            [s.bandwidth_gbps for s in t.switches] + [t.rc_bandwidth_gbps] * H,
+            np.float64,
         )
 
         def depth(sw: Switch) -> int:
@@ -232,7 +317,8 @@ class FlatTopology:
                 cur = t._switch_by_name[cur].parent
             return d
 
-        sw_depth = np.array([depth(s) for s in t.switches] + [0], np.int32)
+        sw_depth = np.array([depth(s) for s in t.switches] + [0] * H, np.int32)
+        rc_names = ("RC",) if H == 1 else tuple(f"RC{h}" for h in range(H))
         return FlatTopology(
             n_pools=P,
             n_switches=S,
@@ -245,7 +331,9 @@ class FlatTopology:
             switch_bandwidth_gbps=sw_bw,
             switch_depth=sw_depth,
             pool_names=tuple(p.name for p in t.pools),
-            switch_names=tuple(s.name for s in t.switches) + ("RC",),
+            switch_names=tuple(s.name for s in t.switches) + rc_names,
+            n_hosts=H,
+            host_reachable=reach,
         )
 
 
@@ -320,4 +408,43 @@ def two_tier_topology(
             ),
         ],
         switches=[Switch("sw", latency_ns=70.0, bandwidth_gbps=cxl_bandwidth_gbps, stt_ns=2.0)],
+    )
+
+
+def pooled_topology(
+    n_hosts: int = 2,
+    cxl_latency_ns: float = 170.0,
+    cxl_bandwidth_gbps: float = 32.0,
+    cxl_capacity_gib: float = 1024.0,
+    switch_stt_ns: float = 2.0,
+    host_ports: Optional[Mapping[int, Sequence[str]]] = None,
+) -> Topology:
+    """The paper's pooling scenario: N hosts sharing one CXL expander.
+
+    Each host keeps its private local DRAM (pool 0) and private RC; the
+    expander and its switch are shared fabric components, so co-attached
+    hosts contend there.  This is the canonical noisy-neighbor /
+    memory-stranding topology.
+    """
+    return Topology(
+        pools=[
+            Pool("local_dram", 88.9, 76.8, int(96 * 2**30), is_local=True),
+            Pool(
+                "shared_pool",
+                cxl_latency_ns,
+                cxl_bandwidth_gbps,
+                int(cxl_capacity_gib * 2**30),
+                parent="fabric_sw",
+            ),
+        ],
+        switches=[
+            Switch(
+                "fabric_sw",
+                latency_ns=70.0,
+                bandwidth_gbps=cxl_bandwidth_gbps,
+                stt_ns=switch_stt_ns,
+            )
+        ],
+        n_hosts=n_hosts,
+        host_ports=host_ports,
     )

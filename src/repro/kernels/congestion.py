@@ -14,8 +14,13 @@ Two kernels:
 
   * :func:`congestion_scan` — one switch's queue over a pre-sorted epoch
     (the original single-stage kernel; kept for the legacy per-stage path).
-  * :func:`congestion_cascade` — the fused S-stage cascade: one kernel
-    launch walks every switch stage (deepest first) over the same epoch.
+  * :func:`congestion_cascade` / :func:`congestion_cascade_hosts` — the
+    fused S-stage cascade: one kernel launch walks every switch stage
+    (deepest first) over the same epoch.  Both wrap the one shared body
+    (:func:`_cascade_body`); the hosts variant statically adds a host-id
+    row (permuted alongside through every merge) and per-host delay slots
+    in the SMEM stage carries — the shared-fabric decomposition — while
+    the single-host variant emits exactly the original kernel.
     Grid is ``(S, N/B)``; the per-switch carries (running cummax ``f``,
     masked-event rank, and the stage's delay sum) live in SMEM and are reset
     at the first block of each stage, extending the single-switch scan's
@@ -52,7 +57,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 from . import ref as _ref
 
-__all__ = ["congestion_cascade", "congestion_scan", "DEFAULT_BLOCK"]
+__all__ = [
+    "congestion_cascade",
+    "congestion_cascade_hosts",
+    "congestion_scan",
+    "DEFAULT_BLOCK",
+]
 
 DEFAULT_BLOCK = 2048
 _NEG = -1e30  # sentinel "minus infinity" safely inside f32
@@ -138,19 +148,38 @@ def congestion_scan(
 # --------------------------------------------------------------------------- #
 
 
-def _cascade_kernel(
-    t_ref,  # (1, B) tile of the time-sorted arrivals (read at stage 0 only)
-    bits_ref,  # (1, B) tile of per-event route bits (stage s <-> bit s)
-    stt_ref,  # (S,) service times in stage order
-    tout_ref,  # (1, N) final post-congestion times (sorted slot order)
-    idx_ref,  # (1, N) slot -> original sorted position
-    delay_ref,  # (1, 1) per-stage delay sum, block s of a (1, S) output
-    t_buf,  # VMEM (1, N): current times, kept sorted across stages
-    bits_buf,  # VMEM (1, N): route bits, permuted alongside t_buf
-    idx_buf,  # VMEM (1, N): original sorted position, permuted alongside
-    carry_ref,  # SMEM f32[3]: [0]=running cummax, [1]=rank, [2]=delay sum
-):
-    """One (stage, block) step of the fused cascade; see module docstring."""
+def _cascade_body(n_hosts, has_hosts, *refs):
+    """One (stage, block) step of the fused cascade — shared kernel body.
+
+    ``has_hosts`` (static) selects the host-segmented variant: the refs
+    gain a host-id input tile and a host VMEM row (permuted alongside the
+    times through every merge), the SMEM stage carries gain ``n_hosts``
+    per-host delay slots, and the per-stage delay output row widens from
+    one scalar to ``[n_hosts]``.  With ``has_hosts=False`` the emitted code
+    is exactly the single-host cascade — no host tile, no extra scratch,
+    no second delay reduction.
+
+    Ref layout (inputs, outputs, scratch):
+      t_ref     (1, B) time-sorted arrival tile (read at stage 0 only)
+      bits_ref  (1, B) per-event route bits (stage s <-> bit s)
+      host_ref  (1, B) per-event host ids                  [has_hosts only]
+      stt_ref   (S,)   service times in stage order
+      tout_ref  (1, N) final post-congestion times (sorted slot order)
+      idx_ref   (1, N) slot -> original sorted position
+      delay_ref (1, H or 1) per-stage delay row, block s of the output
+      t_buf     VMEM (1, N) current times, kept sorted across stages
+      bits_buf  VMEM (1, N) route bits, permuted alongside t_buf
+      idx_buf   VMEM (1, N) original sorted position, permuted alongside
+      host_buf  VMEM (1, N) host ids, permuted alongside  [has_hosts only]
+      carry_ref SMEM f32[3 (+ H)]: [0]=cummax, [1]=rank, [2]=stage delay,
+                [3 + h]=host h's delay sum                [has_hosts only]
+    """
+    if has_hosts:
+        (t_ref, bits_ref, host_ref, stt_ref, tout_ref, idx_ref, delay_ref,
+         t_buf, bits_buf, idx_buf, host_buf, carry_ref) = refs
+    else:
+        (t_ref, bits_ref, stt_ref, tout_ref, idx_ref, delay_ref,
+         t_buf, bits_buf, idx_buf, carry_ref) = refs
     s = pl.program_id(0)
     b = pl.program_id(1)
     nb = pl.num_programs(1)
@@ -162,6 +191,8 @@ def _cascade_kernel(
     def _load():
         t_buf[0, pl.ds(off, block)] = t_ref[0, :]
         bits_buf[0, pl.ds(off, block)] = bits_ref[0, :]
+        if has_hosts:
+            host_buf[0, pl.ds(off, block)] = host_ref[0, :]
         iota = jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
         idx_buf[0, pl.ds(off, block)] = iota[0, :] + off
 
@@ -170,6 +201,9 @@ def _cascade_kernel(
         carry_ref[0] = _NEG
         carry_ref[1] = 0.0
         carry_ref[2] = 0.0
+        if has_hosts:
+            for h in range(n_hosts):
+                carry_ref[3 + h] = 0.0
 
     t = t_buf[0, pl.ds(off, block)]
     bits = bits_buf[0, pl.ds(off, block)]
@@ -182,15 +216,26 @@ def _cascade_kernel(
     f_local = jax.lax.cummax(g)
     f = jnp.maximum(f_local, carry_ref[0])
     start = jnp.where(m, f + stt * rank, t)
+    d = jnp.where(m, start - t, 0.0)
 
     t_buf[0, pl.ds(off, block)] = start
     carry_ref[0] = jnp.maximum(carry_ref[0], f_local[-1])
     carry_ref[1] = carry_ref[1] + jnp.sum(mf)
-    carry_ref[2] = carry_ref[2] + jnp.sum(jnp.where(m, start - t, 0.0))
+    carry_ref[2] = carry_ref[2] + jnp.sum(d)
+    if has_hosts:
+        hv = host_buf[0, pl.ds(off, block)]
+        for h in range(n_hosts):
+            carry_ref[3 + h] = carry_ref[3 + h] + jnp.sum(
+                jnp.where(hv == h, d, 0.0)
+            )
 
     @pl.when(b == nb - 1)
     def _finish_stage():
-        delay_ref[0, 0] = carry_ref[2]
+        if has_hosts:
+            for h in range(n_hosts):
+                delay_ref[0, h] = carry_ref[3 + h]
+        else:
+            delay_ref[0, 0] = carry_ref[2]
 
         @pl.when((s < n_stages - 1) & (carry_ref[2] > 0))
         def _merge():
@@ -202,7 +247,12 @@ def _cascade_kernel(
             bt = bits_buf[0, :]
             ix = idx_buf[0, :]
             changed = (jnp.right_shift(bt, s) & 1) == 1
-            x, bt, ix = _ref.merge_sorted_runs(x, changed, bt, ix)
+            if has_hosts:
+                hrow = host_buf[0, :]
+                x, bt, ix, hrow = _ref.merge_sorted_runs(x, changed, bt, ix, hrow)
+                host_buf[0, :] = hrow
+            else:
+                x, bt, ix = _ref.merge_sorted_runs(x, changed, bt, ix)
             t_buf[0, :] = x
             bits_buf[0, :] = bt
             idx_buf[0, :] = ix
@@ -211,6 +261,19 @@ def _cascade_kernel(
         def _write_out():
             tout_ref[0, :] = t_buf[0, :]
             idx_ref[0, :] = idx_buf[0, :]
+
+
+def _pad_to_block(block, t_sorted, route_bits, hosts=None):
+    n = t_sorted.shape[0]
+    if n % block != 0:
+        pad = block - n % block
+        t_sorted = jnp.pad(
+            t_sorted, (0, pad), constant_values=jnp.finfo(t_sorted.dtype).max / 4
+        )
+        route_bits = jnp.pad(route_bits, (0, pad))
+        if hosts is not None:
+            hosts = jnp.pad(hosts, (0, pad))
+    return t_sorted, route_bits, hosts
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
@@ -230,12 +293,7 @@ def congestion_cascade(
     """
     n = t_sorted.shape[0]
     n_stages = int(stts.shape[0])
-    if n % block != 0:
-        pad = block - n % block
-        t_sorted = jnp.pad(
-            t_sorted, (0, pad), constant_values=jnp.finfo(t_sorted.dtype).max / 4
-        )
-        route_bits = jnp.pad(route_bits, (0, pad))
+    t_sorted, route_bits, _ = _pad_to_block(block, t_sorted, route_bits)
     npad = t_sorted.shape[0]
     nb = npad // block
 
@@ -244,7 +302,7 @@ def congestion_cascade(
     stt_arr = jnp.asarray(stts, t_sorted.dtype)
 
     t_fin, idx, delay = pl.pallas_call(
-        _cascade_kernel,
+        functools.partial(_cascade_body, 1, False),
         grid=(n_stages, nb),
         in_specs=[
             pl.BlockSpec((1, block), lambda s, b: (0, b)),  # arrival tile
@@ -270,3 +328,69 @@ def congestion_cascade(
         interpret=interpret,
     )(t2, bits2, stt_arr)
     return t_fin[0, :n], idx[0, :n], delay[0, :]
+
+
+# --------------------------------------------------------------------------- #
+# Host-segmented cascade (shared-fabric multi-host analysis)
+# --------------------------------------------------------------------------- #
+
+
+@functools.partial(jax.jit, static_argnames=("n_hosts", "block", "interpret"))
+def congestion_cascade_hosts(
+    t_sorted: jnp.ndarray,  # [N] f32, globally time-sorted arrivals
+    route_bits: jnp.ndarray,  # [N] i32, bit s set iff event traverses stage s
+    hosts: jnp.ndarray,  # [N] i32 host ids, same sorted order
+    stts: jnp.ndarray,  # [S] f32, service times in stage order
+    n_hosts: int = 1,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+):
+    """Fused cascade with per-host delay segmentation in one kernel launch.
+
+    Returns ``(t_final[N], slot_idx[N], per_stage_delay[S, n_hosts])`` —
+    the host axis decomposes each stage's queueing delay by the host whose
+    event waited, matching
+    :func:`repro.kernels.ref.serial_queue_cascade` with ``hosts`` given.
+    Shares its kernel body (:func:`_cascade_body`) with the single-host
+    :func:`congestion_cascade`, which pays none of the host-axis cost.
+    """
+    n = t_sorted.shape[0]
+    n_stages = int(stts.shape[0])
+    t_sorted, route_bits, hosts = _pad_to_block(block, t_sorted, route_bits, hosts)
+    npad = t_sorted.shape[0]
+    nb = npad // block
+
+    t2 = t_sorted.reshape(1, npad)
+    bits2 = route_bits.astype(jnp.int32).reshape(1, npad)
+    host2 = hosts.astype(jnp.int32).reshape(1, npad)
+    stt_arr = jnp.asarray(stts, t_sorted.dtype)
+
+    t_fin, idx, delay = pl.pallas_call(
+        functools.partial(_cascade_body, n_hosts, True),
+        grid=(n_stages, nb),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda s, b: (0, b)),  # arrival tile
+            pl.BlockSpec((1, block), lambda s, b: (0, b)),  # route-bit tile
+            pl.BlockSpec((1, block), lambda s, b: (0, b)),  # host-id tile
+            pl.BlockSpec(memory_space=pl.ANY),  # stts vector
+        ],
+        out_specs=[
+            pl.BlockSpec((1, npad), lambda s, b: (0, 0)),  # t_final row
+            pl.BlockSpec((1, npad), lambda s, b: (0, 0)),  # slot idx row
+            pl.BlockSpec((1, n_hosts), lambda s, b: (0, s)),  # stage delay row
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, npad), t_sorted.dtype),
+            jax.ShapeDtypeStruct((1, npad), jnp.int32),
+            jax.ShapeDtypeStruct((1, n_stages * n_hosts), t_sorted.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, npad), t_sorted.dtype),
+            pltpu.VMEM((1, npad), jnp.int32),
+            pltpu.VMEM((1, npad), jnp.int32),
+            pltpu.VMEM((1, npad), jnp.int32),
+            pltpu.SMEM((3 + n_hosts,), t_sorted.dtype),
+        ],
+        interpret=interpret,
+    )(t2, bits2, host2, stt_arr)
+    return t_fin[0, :n], idx[0, :n], delay[0, :].reshape(n_stages, n_hosts)

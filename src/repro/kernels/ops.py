@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .congestion import congestion_cascade as _cascade_pallas
+from .congestion import congestion_cascade_hosts as _cascade_hosts_pallas
 from .congestion import congestion_scan as _congestion_pallas
 from .flash_attention import flash_attention as _flash_pallas
 from .ssd_scan import ssd_scan as _ssd_pallas
@@ -135,6 +136,8 @@ def congestion_cascade(
     impl: Optional[str] = None,
     block: int = 2048,
     merge_plan=None,
+    hosts: Optional[jnp.ndarray] = None,
+    n_hosts: int = 1,
 ):
     """Fused S-stage congestion cascade over one time-sorted epoch.
 
@@ -143,10 +146,22 @@ def congestion_cascade(
     ``merge_plan`` (static, from :func:`repro.core.analyzer.plan_cascade`)
     prunes inter-stage merges on the ``'ref'`` path; the Pallas kernel
     always runs the conservative (always-valid) schedule.
+
+    With ``hosts`` (per-event host ids, same sorted order as ``t_sorted``),
+    ``per_stage_delay`` becomes host-segmented ``[S, n_hosts]`` — the Pallas
+    path accumulates the per-host sums in its SMEM stage carries.
     """
     i = _resolve(impl)
     if i == "ref":
-        return ref.serial_queue_cascade(t_sorted, route_bits, stts, merge_plan)
-    return _cascade_pallas(
-        t_sorted, route_bits, stts, block=block, interpret=(i == "pallas_interpret")
+        return ref.serial_queue_cascade(
+            t_sorted, route_bits, stts, merge_plan, hosts=hosts, n_hosts=n_hosts
+        )
+    if hosts is None:
+        return _cascade_pallas(
+            t_sorted, route_bits, stts, block=block,
+            interpret=(i == "pallas_interpret"),
+        )
+    return _cascade_hosts_pallas(
+        t_sorted, route_bits, hosts, stts, n_hosts=n_hosts, block=block,
+        interpret=(i == "pallas_interpret"),
     )

@@ -101,6 +101,8 @@ def serial_queue_cascade(
     route_bits: jnp.ndarray,  # [N] i32, bit s set iff event traverses stage s
     stts: jnp.ndarray,  # [S] f32, service times in stage order
     merge_plan=None,  # static: per-stage tuple of (changed_bit, within_bit|None)
+    hosts: jnp.ndarray = None,  # [N] i32 host ids in sorted order (optional)
+    n_hosts: int = 1,  # static; only used when hosts is given
 ):
     """Fused S-stage congestion cascade over one time-sorted epoch.
 
@@ -126,6 +128,13 @@ def serial_queue_cascade(
     the post-congestion time of the event originally at sorted position
     ``slot_idx[k]``, and ``per_stage_delay[s]`` is the summed queueing delay
     at stage ``s``.
+
+    With ``hosts`` (per-event host ids in the same sorted order as
+    ``t_sorted``), ``per_stage_delay`` is host-segmented to shape ``[S,
+    n_hosts]`` — the shared-fabric decomposition: a stage's queueing delay
+    is charged to the host whose event waited.  Hosts are recovered through
+    the cascade's live permutation (``hosts[idx]``), so merges need no extra
+    payload.
     """
     f32 = t_sorted.dtype
     n = t_sorted.shape[0]
@@ -159,8 +168,14 @@ def serial_queue_cascade(
         g = jnp.where(m, ts - stt * rankf, -big)
         f = jax.lax.cummax(g)
         start = jnp.where(m, f + stt * rankf, ts)
-        dsum = jnp.where(m, start - ts, 0.0).sum()
-        per_stage.append(dsum)
+        d = jnp.where(m, start - ts, 0.0)
+        dsum = d.sum()
+        if hosts is None:
+            per_stage.append(dsum)
+        else:
+            per_stage.append(
+                jax.ops.segment_sum(d, hosts[idx], num_segments=n_hosts)
+            )
         dirty = dirty + dsum
         ts = jnp.where(m, start, ts)
     return ts, idx, jnp.stack(per_stage)

@@ -1,0 +1,168 @@
+"""CoherencyModel: BI traffic and miss latency vs hand-computed oracles."""
+
+import numpy as np
+import pytest
+
+from repro.core import CoherencyConfig, CoherencyModel, MemEvents, RegionMap
+
+
+def _regions(pool=1, cls="kvcache"):
+    rm = RegionMap()
+    rm.alloc("shared", 1 << 20, cls, pool=pool)
+    rm.alloc("private", 1 << 20, "activation", pool=pool)
+    return rm
+
+
+def _trace(n_writes, n_reads, rid=0, pool=1):
+    n = n_writes + n_reads
+    return MemEvents(
+        t_ns=np.linspace(0.0, 1000.0, n),
+        pool=np.full((n,), pool, np.int32),
+        bytes_=np.full((n,), 64.0),
+        is_write=np.arange(n) < n_writes,
+        region=np.full((n,), rid, np.int32),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# single-attach analytic mode
+# --------------------------------------------------------------------------- #
+
+
+def test_epoch_traffic_bi_oracle():
+    """n_hosts=3 => 2 sharers: BI count and bytes are exactly writes * 2."""
+    rm = _regions()
+    cfg = CoherencyConfig(n_hosts=3, shared_classes=("kvcache",))
+    model = CoherencyModel(cfg, rm)
+    n_writes, n_reads = 40, 60
+    bi, extra = model.epoch_traffic(_trace(n_writes, n_reads))
+    want_bi = n_writes * 2  # one packet per sharer per write
+    assert model.bi_messages_total == want_bi
+    assert bi.total_bytes == pytest.approx(want_bi * cfg.bi_message_bytes)
+    assert bi.is_write.all()
+    # miss latency: reads * writes/(reads+writes) * miss_ns
+    want_extra = n_reads * (n_writes / (n_writes + n_reads)) * cfg.coherency_miss_ns
+    assert extra == pytest.approx(want_extra)
+
+
+def test_epoch_traffic_subsampling_preserves_bytes():
+    rm = _regions()
+    cfg = CoherencyConfig(n_hosts=4, shared_classes=("kvcache",), max_bi_events=16)
+    model = CoherencyModel(cfg, rm)
+    bi, _ = model.epoch_traffic(_trace(1000, 0))
+    assert bi.n == 16  # capped
+    assert bi.total_bytes == pytest.approx(1000 * 3 * cfg.bi_message_bytes)
+
+
+def test_epoch_traffic_single_host_noop():
+    for n_hosts in (0, 1):
+        model = CoherencyModel(
+            CoherencyConfig(n_hosts=n_hosts, shared_classes=("kvcache",)), _regions()
+        )
+        bi, extra = model.epoch_traffic(_trace(50, 50))
+        assert bi.n == 0 and extra == 0.0
+        assert model.bi_messages_total == 0.0
+
+
+def test_epoch_traffic_shared_class_filtering():
+    # region class not in shared_classes => no traffic
+    model = CoherencyModel(
+        CoherencyConfig(n_hosts=2, shared_classes=("param",)), _regions(cls="kvcache")
+    )
+    bi, extra = model.epoch_traffic(_trace(50, 50))
+    assert bi.n == 0 and extra == 0.0
+    # shared class but resident in local DRAM (pool 0) => not pooled, no BI
+    model = CoherencyModel(
+        CoherencyConfig(n_hosts=2, shared_classes=("kvcache",)), _regions(pool=0)
+    )
+    bi, extra = model.epoch_traffic(_trace(50, 50))
+    assert bi.n == 0 and extra == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# fabric mode: sharers derived from the actual per-host traces
+# --------------------------------------------------------------------------- #
+
+
+def _fabric_setup(n_hosts=3):
+    maps = []
+    for _ in range(n_hosts):
+        rm = RegionMap()
+        rm.alloc("kv", 1 << 20, "kvcache", pool=1)
+        maps.append(rm)
+    return maps
+
+
+def test_fabric_traffic_bi_injected_into_sharers_streams():
+    """Writer's writes fan out one BI per observed sharer, landing in the
+    sharer's stream (host-tagged, on the sharer's pool mapping)."""
+    maps = _fabric_setup(3)
+    cfg = CoherencyConfig(shared_classes=("kvcache",))
+    model = CoherencyModel(cfg)
+    traces = [
+        _trace(10, 0),  # host 0 writes 10 times
+        _trace(0, 20),  # host 1 only reads
+        MemEvents.empty(),  # host 2 never touches the region: NOT a sharer
+    ]
+    bi, miss = model.fabric_traffic(traces, maps)
+    # host 1 (the only other observed sharer) receives host 0's fan-out
+    assert bi[1].n == 10
+    assert (bi[1].host == 1).all()
+    assert (bi[1].pool == 1).all()
+    assert bi[1].total_bytes == pytest.approx(10 * cfg.bi_message_bytes)
+    # the writer and the absent host receive nothing
+    assert bi[0].n == 0 and bi[2].n == 0
+    # miss latency only for the reading sharer:
+    # reads * remote_writes/total_accesses * miss_ns = 20 * 10/30 * 60
+    assert miss[1] == pytest.approx(20 * (10 / 30) * cfg.coherency_miss_ns)
+    assert miss[0] == 0.0 and miss[2] == 0.0
+    assert model.bi_messages_total == pytest.approx(10.0)
+
+
+def test_fabric_traffic_sharers_from_traces_not_config():
+    """cfg.n_hosts must be irrelevant in fabric mode: with a single observed
+    accessor there are no sharers, hence no traffic."""
+    maps = _fabric_setup(2)
+    model = CoherencyModel(CoherencyConfig(n_hosts=8, shared_classes=("kvcache",)))
+    bi, miss = model.fabric_traffic([_trace(50, 50), MemEvents.empty()], maps)
+    assert all(b.n == 0 for b in bi)
+    assert (miss == 0).all()
+
+
+def test_fabric_traffic_symmetric_writers():
+    """Two writing sharers invalidate each other."""
+    maps = _fabric_setup(2)
+    cfg = CoherencyConfig(shared_classes=("kvcache",))
+    model = CoherencyModel(cfg)
+    bi, miss = model.fabric_traffic([_trace(5, 5), _trace(7, 3)], maps)
+    assert bi[0].n == 7 and bi[1].n == 5  # each receives the other's writes
+    assert bi[0].total_bytes == pytest.approx(7 * cfg.bi_message_bytes)
+    # miss: host0 reads=5, remote writes=7, total accesses=20
+    assert miss[0] == pytest.approx(5 * (7 / 20) * cfg.coherency_miss_ns)
+    assert miss[1] == pytest.approx(3 * (5 / 20) * cfg.coherency_miss_ns)
+
+
+def test_fabric_traffic_weight_aware_bytes():
+    """PEBS-sampled writer traces keep aggregate BI bytes unbiased."""
+    maps = _fabric_setup(2)
+    cfg = CoherencyConfig(shared_classes=("kvcache",))
+    model = CoherencyModel(cfg)
+    tr = _trace(10, 0)
+    tr = MemEvents(tr.t_ns, tr.pool, tr.bytes_, tr.is_write, tr.region,
+                   weight=np.full((tr.n,), 4.0))
+    bi, _ = model.fabric_traffic([tr, _trace(0, 5)], maps)
+    assert bi[1].total_bytes == pytest.approx(10 * 4.0 * cfg.bi_message_bytes)
+    # statistical multiplicity rides in weight too, so weight-proportional
+    # (latency-class) charges for BI messages stay unbiased as well
+    assert float(bi[1].weight.sum()) == pytest.approx(10 * 4.0)
+
+
+def test_fabric_traffic_shared_class_filtering():
+    maps = []
+    for _ in range(2):
+        rm = RegionMap()
+        rm.alloc("kv", 1 << 20, "activation", pool=1)  # not a shared class
+        maps.append(rm)
+    model = CoherencyModel(CoherencyConfig(shared_classes=("kvcache",)))
+    bi, miss = model.fabric_traffic([_trace(10, 0), _trace(0, 10)], maps)
+    assert all(b.n == 0 for b in bi) and (miss == 0).all()

@@ -1,0 +1,450 @@
+"""Shared-fabric multi-host simulation: event merging, per-(host, pool)
+routing, host-segmented analysis, and the FabricSession end-to-end."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Access,
+    ClassMapPolicy,
+    CoherencyConfig,
+    CXLMemSim,
+    EpochAnalyzer,
+    FabricSession,
+    FineGrainedSimulator,
+    MemEvents,
+    Phase,
+    RegionMap,
+    Tenant,
+    analyze_ref,
+    figure1_topology,
+    merge_host_traces,
+    pooled_topology,
+    split_by_host,
+    synthetic_trace,
+    two_tier_topology,
+)
+from repro.core.events import EventStager
+from repro.core.topology import Topology
+
+
+# --------------------------------------------------------------------------- #
+# events: host tagging, merge/split
+# --------------------------------------------------------------------------- #
+
+
+def test_events_default_host_zero():
+    ev = synthetic_trace(100, 2, seed=0)
+    assert (ev.host == 0).all()
+    assert ev.take(np.arange(10)).host.shape == (10,)
+
+
+def test_merge_split_round_trip():
+    a = synthetic_trace(200, 2, epoch_ns=1e5, seed=0)
+    b = synthetic_trace(150, 2, epoch_ns=1e5, seed=1)
+    merged = merge_host_traces([a, b])
+    assert merged.n == 350
+    assert (np.diff(merged.t_ns) >= 0).all()  # time-sorted
+    pa, pb = split_by_host(merged, 2)
+    assert pa.n == 200 and pb.n == 150
+    np.testing.assert_allclose(np.sort(pa.t_ns), np.sort(a.t_ns))
+    assert pa.total_bytes == pytest.approx(a.total_bytes)
+    assert (pa.host == 0).all() and (pb.host == 1).all()
+
+
+def test_stager_stages_host_column():
+    a = synthetic_trace(20, 2, seed=0).with_host(1)
+    buf = EventStager().stage([a], 1, 32)
+    assert (buf["host"][0, :20] == 1).all()
+    assert (buf["host"][0, 20:] == 0).all()
+
+
+# --------------------------------------------------------------------------- #
+# topology: multi-host lowering
+# --------------------------------------------------------------------------- #
+
+
+def test_single_host_lowering_unchanged():
+    """n_hosts=1 keeps the historical shapes and names exactly."""
+    flat = figure1_topology().flatten()
+    assert flat.n_hosts == 1
+    assert flat.route.shape == (4, 3)
+    assert flat.switch_names[-1] == "RC"
+    assert flat.n_vpools == flat.n_pools
+
+
+def test_multi_host_lowering_shares_switches_privately_rcs():
+    flat = pooled_topology(n_hosts=2).flatten()
+    P = flat.n_pools
+    assert flat.n_hosts == 2
+    assert flat.switch_names == ("fabric_sw", "RC0", "RC1")
+    assert flat.route.shape == (2 * P, 3)
+    # both hosts' expander rows traverse the shared switch...
+    assert flat.route[flat.vp_index(0, 1), 0] == 1
+    assert flat.route[flat.vp_index(1, 1), 0] == 1
+    # ...but only their own RC
+    assert flat.route[flat.vp_index(0, 1), 1] == 1
+    assert flat.route[flat.vp_index(0, 1), 2] == 0
+    assert flat.route[flat.vp_index(1, 1), 2] == 1
+    assert flat.route[flat.vp_index(1, 1), 1] == 0
+    # local DRAM rows route nowhere for every host
+    assert flat.route[flat.vp_index(0, 0)].sum() == 0
+    assert flat.route[flat.vp_index(1, 0)].sum() == 0
+
+
+def test_analyzers_reject_unreachable_traffic():
+    """Events targeting a pool the host's ports exclude have no fabric
+    route; analyzing them silently would charge latency with zero switch
+    traversal, so every analyzer path refuses."""
+    flat = pooled_topology(n_hosts=2, host_ports={1: ()}).flatten()
+    bad = merge_host_traces(
+        [synthetic_trace(50, 2, seed=0), synthetic_trace(50, 2, seed=1)]
+    )
+    with pytest.raises(ValueError, match="cannot reach"):
+        analyze_ref(flat, bad)
+    with pytest.raises(ValueError, match="cannot reach"):
+        EpochAnalyzer(flat).analyze(bad)
+    with pytest.raises(ValueError, match="cannot reach"):
+        FineGrainedSimulator(flat).simulate(bad)
+    # host 0's traffic alone (and host 1's local-only traffic) is fine
+    ok = merge_host_traces([synthetic_trace(50, 2, seed=0), synthetic_trace(50, 1, seed=1)])
+    analyze_ref(flat, ok)
+
+
+def test_host_ports_restrict_reachability():
+    topo = pooled_topology(n_hosts=2, host_ports={1: ()})
+    flat = topo.flatten()
+    assert flat.host_reachable[0, 1] and not flat.host_reachable[1, 1]
+    assert flat.route[flat.vp_index(1, 1)].sum() == 0
+    with pytest.raises(ValueError):
+        pooled_topology(n_hosts=2, host_ports={1: ("no_such_port",)})
+    with pytest.raises(ValueError):
+        pooled_topology(n_hosts=2, host_ports={5: ("fabric_sw",)})
+
+
+# --------------------------------------------------------------------------- #
+# analyzer: single-host path unchanged (acceptance)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("topo_fn", [figure1_topology, two_tier_topology])
+def test_fused_matches_oracle_single_host(topo_fn):
+    """n_hosts=1 fused output must match analyze_ref to existing tolerances."""
+    flat = topo_fn().flatten()
+    ev = synthetic_trace(2000, flat.n_pools, epoch_ns=1e6, seed=3, burstiness=0.7)
+    ref = analyze_ref(flat, ev)
+    got = EpochAnalyzer(flat).analyze(ev)
+    assert got.latency_ns == pytest.approx(ref.latency_ns, rel=1e-4)
+    assert got.congestion_ns == pytest.approx(ref.congestion_ns, rel=1e-3)
+    # the single-element host decomposition is the total
+    assert got.per_host_latency_ns.shape == (1,)
+    assert got.per_host_latency_ns[0] == pytest.approx(got.latency_ns, rel=1e-6)
+    assert got.per_host_congestion_ns[0] == pytest.approx(got.congestion_ns, rel=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# analyzer: shared fabric semantics (acceptance)
+# --------------------------------------------------------------------------- #
+
+
+def _saturating_traces(n=400, epoch_ns=1e5, nbytes=2.5e4):
+    """Two co-scheduled bursty tenants hammering pool 1 hard enough to
+    saturate a 1 GB/s link even privately."""
+    out = []
+    for seed in (0, 1):
+        rng = np.random.default_rng(seed)
+        t = np.sort(rng.uniform(0, epoch_ns, n))
+        out.append(
+            MemEvents.build(t, [1] * n, [nbytes] * n)
+        )
+    return out
+
+
+def test_shared_fabric_strictly_more_contended_than_private():
+    """Two hosts on one shared expander: strictly more congestion+bandwidth
+    than the same two traces on private copies of the topology; per-host
+    breakdowns sum to the fabric totals."""
+    tr0, tr1 = _saturating_traces()
+    shared_flat = pooled_topology(n_hosts=2, cxl_bandwidth_gbps=1.0).flatten()
+    priv_flat = pooled_topology(n_hosts=1, cxl_bandwidth_gbps=1.0).flatten()
+
+    fabric = analyze_ref(shared_flat, merge_host_traces([tr0, tr1]))
+    priv = analyze_ref(priv_flat, tr0) + analyze_ref(priv_flat, tr1)
+
+    assert fabric.congestion_ns > priv.congestion_ns
+    assert fabric.bandwidth_ns > priv.bandwidth_ns
+    # latency delay is contention-free: identical on shared and private
+    assert fabric.latency_ns == pytest.approx(priv.latency_ns, rel=1e-9)
+    # decomposition closes
+    assert fabric.per_host_congestion_ns.sum() == pytest.approx(
+        fabric.congestion_ns, rel=1e-9
+    )
+    assert fabric.per_host_bandwidth_ns.sum() == pytest.approx(
+        fabric.bandwidth_ns, rel=1e-9
+    )
+    assert fabric.per_host_latency_ns.sum() == pytest.approx(
+        fabric.latency_ns, rel=1e-9
+    )
+
+
+@pytest.mark.parametrize("impl", ["inline", "pallas_interpret"])
+def test_fused_fabric_matches_oracle(impl):
+    """Fused device paths reproduce the multi-host oracle, host segments
+    included."""
+    topo = figure1_topology()
+    topo3 = Topology(
+        topo.pools, topo.switches, topo.rc_latency_ns, topo.rc_bandwidth_gbps,
+        topo.rc_stt_ns, topo.local_dram_latency_ns, n_hosts=3,
+    )
+    flat = topo3.flatten()
+    merged = merge_host_traces(
+        [
+            synthetic_trace(1200, flat.n_pools, epoch_ns=2e5, seed=i, burstiness=0.8)
+            for i in range(3)
+        ]
+    )
+    ref = analyze_ref(flat, merged)
+    got = EpochAnalyzer(flat, impl=impl).analyze(merged)
+    assert got.latency_ns == pytest.approx(ref.latency_ns, rel=1e-4)
+    assert got.congestion_ns == pytest.approx(ref.congestion_ns, rel=1e-3)
+    np.testing.assert_allclose(
+        got.per_host_congestion_ns, ref.per_host_congestion_ns, rtol=5e-3
+    )
+    np.testing.assert_allclose(
+        got.per_host_latency_ns, ref.per_host_latency_ns, rtol=1e-4
+    )
+
+
+def test_fine_grained_matches_oracle_on_fabric():
+    """Event-by-event DES agrees with the epoch oracle on a shared fabric
+    (stt service mode), per-host segments included."""
+    flat = pooled_topology(n_hosts=2).flatten()
+    merged = merge_host_traces(
+        [
+            synthetic_trace(1500, flat.n_pools, epoch_ns=2e5, seed=i, burstiness=0.8)
+            for i in range(2)
+        ]
+    )
+    ref = analyze_ref(flat, merged)
+    des = FineGrainedSimulator(flat, bandwidth_mode="stt").simulate(merged)
+    assert des.congestion_ns == pytest.approx(ref.congestion_ns, rel=1e-6)
+    np.testing.assert_allclose(
+        des.per_host_congestion_ns, ref.per_host_congestion_ns, rtol=1e-6
+    )
+
+
+def test_analyzers_reject_out_of_range_hosts():
+    """A merged trace with more hosts than the topology declares must fail
+    loudly — the jitted gather would otherwise clamp the host id and route
+    the traffic through the wrong (host, pool) row."""
+    flat = pooled_topology(n_hosts=2).flatten()
+    bad = merge_host_traces(
+        [synthetic_trace(30, 2, seed=i) for i in range(3)]  # hosts 0..2
+    )
+    with pytest.raises(ValueError, match="host id 2"):
+        analyze_ref(flat, bad)
+    with pytest.raises(ValueError, match="host id 2"):
+        EpochAnalyzer(flat).analyze(bad)
+    with pytest.raises(ValueError, match="host id 2"):
+        FineGrainedSimulator(flat).simulate(bad)
+
+
+def test_fabric_session_rejects_single_tenant_coherency():
+    """One tenant has no sharers to derive coherency from; a silently-zero
+    BI report would masquerade as a coherency-free result."""
+    with pytest.raises(ValueError, match="single-tenant"):
+        FabricSession(
+            pooled_topology(n_hosts=1),
+            [_tenant("solo", step=False)],
+            coherency=CoherencyConfig(shared_classes=("kvcache",)),
+        )
+
+
+def test_fabric_session_rejects_host_count_mismatch():
+    """Only single-host topologies are auto-lifted to the tenant count; an
+    explicit multi-host declaration that disagrees is a config error."""
+    with pytest.raises(ValueError, match="4 hosts but 2 tenants"):
+        FabricSession(
+            pooled_topology(n_hosts=4),
+            [_tenant("a", step=False), _tenant("b", step=False)],
+        )
+
+
+def test_wide_fabric_falls_back_to_unfused():
+    """>31 cascade stages (switches + per-host RCs) exceed the 31-bit route
+    word; EpochAnalyzer must degrade to the unfused path, not crash — the
+    rack-scale pooling scenario stays simulable."""
+    H = 31  # 1 shared switch + 31 RCs = 32 stages
+    flat = pooled_topology(n_hosts=H).flatten()
+    an = EpochAnalyzer(flat)
+    assert not an.fused
+    merged = merge_host_traces(
+        [synthetic_trace(40, flat.n_pools, epoch_ns=1e5, seed=i) for i in range(H)]
+    )
+    ref = analyze_ref(flat, merged)
+    got = an.analyze(merged)
+    assert got.latency_ns == pytest.approx(ref.latency_ns, rel=1e-4)
+    assert got.congestion_ns == pytest.approx(ref.congestion_ns, rel=1e-3, abs=1e-3)
+    assert got.per_host_latency_ns.shape == (H,)
+
+
+def test_rc_contention_stays_private():
+    """Traffic from host 0 must not queue behind host 1 at the RC: two
+    hosts' identical streams see exactly the per-host RC delay, not a
+    merged queue."""
+    t = np.zeros((8,))  # 8 simultaneous events, all to pool 1
+    one = MemEvents.build(t, [1] * 8, [64] * 8)
+    flat2 = pooled_topology(n_hosts=2, switch_stt_ns=0.0).flatten()
+    flat1 = pooled_topology(n_hosts=1, switch_stt_ns=0.0).flatten()
+    fabric = analyze_ref(flat2, merge_host_traces([one, one]))
+    priv = analyze_ref(flat1, one)
+    # with the shared switch's stt silenced, only the RC queues remain —
+    # and they are private, so fabric == 2x private exactly
+    assert fabric.congestion_ns == pytest.approx(2 * priv.congestion_ns, rel=1e-9)
+
+
+# --------------------------------------------------------------------------- #
+# FabricSession end-to-end
+# --------------------------------------------------------------------------- #
+
+
+def _tenant(name, traffic_mult=1, step=True):
+    rm = RegionMap()
+    rm.alloc("w", 1 << 22, "param")
+    rm.alloc("kv", 1 << 22, "kvcache")
+    rm.alloc("act", 1 << 20, "activation")
+    phases = [
+        Phase(
+            "fwd",
+            flops=5e8,
+            accesses=(
+                Access("w", traffic_mult * (1 << 22)),
+                Access("kv", traffic_mult * (1 << 22), True),
+                Access("act", 1 << 20, True),
+            ),
+        ),
+    ]
+    step_fn = jax.jit(lambda x: (x @ x.T).sum()) if step else None
+    args = (jnp.ones((64, 64)),) if step else ()
+    return Tenant(
+        name, phases, rm, ClassMapPolicy({"kvcache": "shared_pool"}),
+        step_fn=step_fn, step_args=args,
+    )
+
+
+def test_fabric_session_two_tenants():
+    sess = FabricSession(
+        pooled_topology(n_hosts=2, cxl_bandwidth_gbps=8.0),
+        [_tenant("a"), _tenant("b", traffic_mult=4)],
+        coherency=CoherencyConfig(shared_classes=("kvcache",)),
+    )
+    rep = sess.run(2)
+    assert rep.rounds == 2 and rep.epochs == 2
+    assert all(hc.steps == 2 for hc in rep.hosts)
+    assert all(hc.simulated_s >= hc.native_s for hc in rep.hosts)
+    # per-host decomposition closes against the fabric totals
+    assert sum(hc.latency_s for hc in rep.hosts) == pytest.approx(
+        rep.latency_s, rel=1e-5
+    )
+    assert sum(hc.congestion_s for hc in rep.hosts) == pytest.approx(
+        rep.congestion_s, rel=1e-4, abs=1e-12
+    )
+    assert sum(hc.bandwidth_s for hc in rep.hosts) == pytest.approx(
+        rep.bandwidth_s, rel=1e-4, abs=1e-12
+    )
+    # writes to the shared kv region produced BI fan-out
+    assert rep.bi_messages > 0
+
+
+def test_fabric_session_single_tenant_matches_attach():
+    """One tenant on the fabric == the plain CXLMemSim attach pipeline."""
+    topo = two_tier_topology()
+    rm1 = RegionMap()
+    rm1.alloc("w", 1 << 22, "param")
+    rm1.alloc("opt", 1 << 23, "opt_state")
+    phases = [
+        Phase("fwd", flops=5e8, accesses=(Access("w", 1 << 22), Access("opt", 1 << 23, True))),
+    ]
+    step = jax.jit(lambda x: (x * 2).sum())
+    x = jnp.ones((32,))
+
+    sess = FabricSession(
+        topo,
+        [Tenant("solo", phases, rm1, ClassMapPolicy({"opt_state": "cxl_pool"}),
+                step_fn=step, step_args=(x,))],
+    )
+    sess.run(1)
+
+    rm2 = RegionMap()
+    rm2.alloc("w", 1 << 22, "param")
+    rm2.alloc("opt", 1 << 23, "opt_state")
+    sim = CXLMemSim(two_tier_topology(), ClassMapPolicy({"opt_state": "cxl_pool"}))
+    prog = sim.attach(step, phases, rm2)
+    rep = prog.run(1, x)
+
+    assert sess.report.latency_s == pytest.approx(rep.latency_s, rel=1e-6)
+    assert sess.report.congestion_s == pytest.approx(rep.congestion_s, rel=1e-5, abs=1e-12)
+    assert sess.report.bandwidth_s == pytest.approx(rep.bandwidth_s, rel=1e-5, abs=1e-12)
+
+
+def test_fabric_session_rejects_unreachable_placement():
+    topo = pooled_topology(n_hosts=2, host_ports={1: ()})  # host 1 sees nothing
+    with pytest.raises(ValueError, match="cannot reach"):
+        FabricSession(topo, [_tenant("a", step=False), _tenant("b", step=False)])
+
+
+def test_fabric_session_oversubscription_check():
+    topo = pooled_topology(n_hosts=2, cxl_capacity_gib=0.005)  # ~5 MiB shared
+    with pytest.raises(ValueError, match="oversubscribed"):
+        FabricSession(topo, [_tenant("a", step=False), _tenant("b", step=False)])
+
+
+def test_fabric_capacity_counts_coherent_shared_object_once():
+    """With coherency declared, name-matched shared-class regions are ONE
+    pooled object (the shared-kv-cache scenario): two 4 MiB 'kv' copies on
+    a ~5 MiB pool must fit — the same name-matching rule the coherency
+    model uses to derive sharers."""
+    topo = pooled_topology(n_hosts=2, cxl_capacity_gib=0.005)
+    FabricSession(
+        topo,
+        [_tenant("a", step=False), _tenant("b", step=False)],
+        coherency=CoherencyConfig(shared_classes=("kvcache",)),
+    )  # must not raise: both tenants' 'kv' is one shared object
+
+
+def test_fabric_session_noisy_neighbor_hurts_victim():
+    """Co-attaching a noisy neighbor must inflict contention delay on a
+    victim that runs clean alone — the pooling scenario the refactor
+    exists for.  Both tenants are compute-paced to the same epoch span, so
+    their event streams genuinely overlap on the shared link."""
+
+    def tenants(with_noisy):
+        out = []
+        for name, kv_bytes in [("victim", 1 << 18)] + (
+            [("noisy", 1 << 25)] if with_noisy else []
+        ):
+            rm = RegionMap()
+            rm.alloc("kv", max(kv_bytes, 1 << 22), "kvcache")
+            phases = [
+                Phase("fwd", flops=5e10, accesses=(Access("kv", kv_bytes, True),))
+            ]
+            out.append(
+                Tenant(name, phases, rm, ClassMapPolicy({"kvcache": "shared_pool"}))
+            )
+        return out
+
+    def victim_contention(with_noisy):
+        sess = FabricSession(
+            pooled_topology(n_hosts=2 if with_noisy else 1, cxl_bandwidth_gbps=4.0),
+            tenants(with_noisy),
+        )
+        sess.run(1)
+        hc = sess.report.hosts[0]
+        return hc.congestion_s + hc.bandwidth_s
+
+    alone = victim_contention(False)
+    contended = victim_contention(True)
+    assert contended > alone
+    assert alone == pytest.approx(0.0, abs=1e-12)  # victim is clean by itself

@@ -1,0 +1,75 @@
+"""Epoch segmentation: quantum slicing must preserve every event field."""
+
+import numpy as np
+import pytest
+
+from repro.core import EpochSchedule, MemEvents, slice_by_quantum
+
+
+def _weighted_trace():
+    n = 40
+    return MemEvents(
+        t_ns=np.linspace(0.0, 4e6, n, endpoint=False),
+        pool=np.arange(n, dtype=np.int32) % 3,
+        bytes_=np.full((n,), 128.0),
+        is_write=np.arange(n) % 2 == 0,
+        region=np.arange(n, dtype=np.int32) % 5,
+        weight=np.linspace(1.0, 4.0, n),  # PEBS-style 1/rate multiplicities
+        host=np.arange(n, dtype=np.int32) % 2,
+    )
+
+
+def test_slice_by_quantum_preserves_weights():
+    """Regression: 'quantum' mode used to rebuild MemEvents without weight,
+    silently resetting sampling weights to 1."""
+    ev = _weighted_trace()
+    slices = slice_by_quantum(ev, 1e6)
+    assert len(slices) == 4
+    got = np.concatenate([s.weight for s in slices])
+    np.testing.assert_allclose(np.sort(got), np.sort(ev.weight))
+    assert not np.allclose(got, 1.0)  # the old bug flattened these to 1
+
+
+def test_slice_by_quantum_preserves_all_fields_and_rebases_times():
+    ev = _weighted_trace()
+    slices = slice_by_quantum(ev, 1e6)
+    n_total = 0
+    for q, s in enumerate(slices):
+        assert (s.t_ns >= 0).all() and (s.t_ns < 1e6).all()
+        # recover original indices by absolute time and compare every field
+        t_abs = s.t_ns + q * 1e6
+        orig = np.searchsorted(ev.t_ns, t_abs)
+        np.testing.assert_array_equal(s.pool, ev.pool[orig])
+        np.testing.assert_array_equal(s.region, ev.region[orig])
+        np.testing.assert_array_equal(s.is_write, ev.is_write[orig])
+        np.testing.assert_array_equal(s.host, ev.host[orig])
+        np.testing.assert_allclose(s.weight, ev.weight[orig])
+        np.testing.assert_allclose(s.bytes_, ev.bytes_[orig])
+        n_total += s.n
+    assert n_total == ev.n
+
+
+def test_quantum_weighted_totals_match_unsliced():
+    """Weighted byte/latency accounting must be invariant under slicing."""
+    ev = _weighted_trace()
+    slices = EpochSchedule("quantum", quantum_ns=7.7e5).slices(ev)
+    assert sum(s.n for s in slices) == ev.n
+    assert sum(float((s.bytes_ * s.weight).sum()) for s in slices) == pytest.approx(
+        float((ev.bytes_ * ev.weight).sum())
+    )
+
+
+def test_dense_slicing_keeps_absolute_quantum_alignment():
+    """dense=True must emit empty slices for idle quanta so slice index k
+    always means absolute quantum k (the fabric session's alignment
+    contract); the default keeps the historical compacted behavior."""
+    ev = MemEvents.build([0.5e6, 2.5e6], [0, 0], [64, 64])  # idle quantum 1
+    compact = slice_by_quantum(ev, 1e6)
+    dense = slice_by_quantum(ev, 1e6, dense=True)
+    assert [s.n for s in compact] == [1, 1]
+    assert [s.n for s in dense] == [1, 0, 1]
+    assert dense[2].t_ns[0] == pytest.approx(0.5e6)
+
+
+def test_empty_trace():
+    assert slice_by_quantum(MemEvents.empty(), 1e6) == []
