@@ -7,6 +7,7 @@
   topology_sweep  Figure-1 topology × placement-policy delay decomposition
   roofline        §Roofline table from the multi-pod dry-run JSON
   fabric          shared-fabric contention: hosts × bandwidth + noisy neighbor
+  migration       vectorized migration scaling + device-cache capacity sweep
 
 Run everything:      PYTHONPATH=src python -m benchmarks.run
 Run one:             PYTHONPATH=src python -m benchmarks.run table1
@@ -18,7 +19,8 @@ import time
 
 def main() -> None:
     from benchmarks import (
-        accuracy, fabric_contention, roofline, table1, throughput, topology_sweep,
+        accuracy, fabric_contention, migration_scaling, roofline, table1,
+        throughput, topology_sweep,
     )
 
     suites = {
@@ -28,6 +30,7 @@ def main() -> None:
         "topology_sweep": topology_sweep.main,
         "roofline": roofline.main,
         "fabric": lambda: fabric_contention.main(["--quick"]),
+        "migration": lambda: migration_scaling.main(["--quick"]),
     }
     wanted = sys.argv[1:] or list(suites)
     for name in wanted:

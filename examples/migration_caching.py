@@ -1,0 +1,117 @@
+"""Migration policies x device caching — the paper's headline research use
+("data migration strategies and caching techniques that were previously
+infeasible to evaluate at scale"), on one serving-shaped workload.
+
+Sweeps three tiering configurations (static placement, software migration,
+software migration with a demote_pool escape hatch) against three
+expander-cache capacities, and prints the simulated slowdown grid.
+
+    PYTHONPATH=src python examples/migration_caching.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    Access,
+    CXLMemSim,
+    ClassMapPolicy,
+    DeviceCacheConfig,
+    MigrationConfig,
+    MigrationSimulator,
+    Phase,
+    RegionMap,
+    figure1_topology,
+)
+
+PAGE = 4096
+TOPO = figure1_topology()
+
+
+def build_workload():
+    """A decode-ish step: hot KV pages remote, weights warm local, and a
+    large optimizer region that is local-born but never touched while
+    serving — the classic budget-pinning cold resident."""
+    rm = RegionMap()
+    rm.alloc("w", 64 << 20, "param")  # local (unmapped class)
+    rm.alloc("opt", 128 << 20, "opt_state")  # local-born, idle during decode
+    rm.alloc("kv_hot", 256 * PAGE, "kvcache")  # small, re-read every step
+    rm.alloc("kv_cold", 64 << 20, "kvcache")  # long-tail cache, rarely touched
+    phases = [
+        Phase(
+            "decode",
+            flops=2e9,
+            accesses=(
+                Access("w", 16 << 20),
+                Access("kv_hot", 64 << 20, True),  # heavy reuse of few pages
+                Access("kv_cold", 1 << 20),
+            ),
+        )
+    ]
+    return rm, phases
+
+
+step = jax.jit(lambda x: (x @ x.T).sum())
+x = jnp.ones((128, 128))
+jax.block_until_ready(step(x))  # compile outside the measured steps
+
+# budget (96 MiB) < w + opt (192 MiB): with the plain policy the idle opt
+# region can never leave local DRAM (home == local), so nothing can ever
+# promote; demote_pool breaks the dead-end.  1 MiB granules model a daemon
+# that batches its copies (page-granular bursts queue 4096 transactions at
+# one instant and the STT congestion charge dwarfs the steady-state win).
+MIGRATIONS = {
+    "static": None,
+    "sw-migrate": MigrationConfig(
+        mode="software", promote_threshold=8, demote_threshold=2,
+        local_budget_bytes=96 << 20, granularity_bytes=1 << 20,
+    ),
+    "sw+demote_pool": MigrationConfig(
+        mode="software", promote_threshold=8, demote_threshold=2,
+        local_budget_bytes=96 << 20, granularity_bytes=1 << 20,
+        demote_pool="cxl_pool2",
+    ),
+}
+CACHES = {"no cache": 0, "256 MiB": 256 << 20, "1 GiB": 1 << 30}
+
+print(TOPO.describe())
+print(f"\n{'policy':>16} | " + " | ".join(f"{c:>18}" for c in CACHES))
+for mig_name, mig_cfg in MIGRATIONS.items():
+    cells = []
+    for cap in CACHES.values():
+        rm, phases = build_workload()
+        flat = TOPO.flatten()
+        migration = (
+            MigrationSimulator(mig_cfg, rm, flat) if mig_cfg is not None else None
+        )
+        sim = CXLMemSim(
+            TOPO,
+            ClassMapPolicy({"kvcache": "cxl_pool1"}),
+            migration=migration,
+            cache=DeviceCacheConfig(capacity_bytes=cap, line_bytes=PAGE)
+            if cap
+            else None,
+        )
+        prog = sim.attach(step, phases, rm)
+        rep = prog.run(10, x)  # enough steps to amortize the one-time copies
+        hit = rep.cache_hit_fraction
+        # the simulated delay is the quantity migration/caching reshape;
+        # wall-clock slowdown also rides on the (noisy, µs-scale) toy step
+        delay_ms = (rep.latency_s + rep.congestion_s + rep.bandwidth_s) * 1e3
+        cells.append(
+            f"{delay_ms:7.2f} ms"
+            + (f" hit {hit:4.0%}" if hit == hit else "         ")
+            + (f" p{migration.promotions}" if migration else "   ")
+        )
+    print(f"{mig_name:>16} | " + " | ".join(f"{c:>20}" for c in cells))
+
+print(
+    "\nReading the grid: with the plain policy the idle local-born opt"
+    "\nregion pins the 96 MiB budget, so nothing ever promotes (p0) and"
+    "\nsw-migrate == static; demote_pool evicts it and the hot KV pages go"
+    "\nlocal (p1), cutting the steady-state delay.  The expander cache"
+    "\ntrims the *latency* component of whatever stays remote (hit %);"
+    "\nMB-sized transactions are bandwidth-dominated here, so its effect"
+    "\nis visible but small — benchmarks/migration_scaling.py sweeps the"
+    "\nlatency-bound regime where it is decisive."
+)

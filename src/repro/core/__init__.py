@@ -20,6 +20,7 @@ from .analyzer import (
     plan_cascade,
 )
 from .attach import AttachedProgram, CXLMemSim, SimReport
+from .cache import DeviceCacheConfig, DeviceCacheModel
 from .coherency import CoherencyConfig, CoherencyModel
 from .fabric import FabricReport, FabricSession, HostClock, Tenant
 from .events import (
@@ -34,7 +35,7 @@ from .events import (
     split_by_host,
     synthetic_trace,
 )
-from .migration import MigrationConfig, MigrationSimulator
+from .migration import LocalBudget, MigrationConfig, MigrationSimulator
 from .policy import (
     ClassMapPolicy,
     HotnessTieredPolicy,
@@ -73,6 +74,8 @@ __all__ = [
     "CoherencyConfig",
     "CoherencyModel",
     "DelayBreakdown",
+    "DeviceCacheConfig",
+    "DeviceCacheModel",
     "EpochAnalyzer",
     "EpochSchedule",
     "EventStager",
@@ -84,6 +87,7 @@ __all__ = [
     "HardwareModel",
     "HotnessTieredPolicy",
     "InterleavePolicy",
+    "LocalBudget",
     "LocalOnlyPolicy",
     "MemEvents",
     "MigrationConfig",

@@ -216,6 +216,7 @@ def analyze_ref(
     flat: FlatTopology,
     events: MemEvents,
     bw_window_ns: float = 10_000.0,
+    lat_scale: Optional[np.ndarray] = None,
 ) -> DelayBreakdown:
     """Vectorized numpy implementation of the three-delay model (oracle).
 
@@ -224,6 +225,12 @@ def analyze_ref(
     every delay class additionally comes back host-segmented.  With
     ``n_hosts == 1`` this is numerically identical to the historical
     single-host oracle (``vp == pool`` and the host segment is the total).
+
+    ``lat_scale`` (``[H*P]``, from
+    :meth:`~repro.core.cache.DeviceCacheModel.latency_scale`) multiplies
+    each event's added latency — the device-cache epoch summary.  Hits
+    still traverse the fabric, so congestion/bandwidth are deliberately
+    unscaled; an all-ones vector is bitwise identical to passing None.
     """
     P, S, H = flat.n_pools, flat.n_switches, flat.n_hosts
     if events.n == 0:
@@ -238,7 +245,10 @@ def analyze_ref(
 
     # -- 1. latency delay ------------------------------------------------- #
     per_event_lat = flat.pool_latency_ns[vp] - flat.local_latency_ns
-    per_event_lat = np.maximum(per_event_lat, 0.0) * events.weight
+    per_event_lat = np.maximum(per_event_lat, 0.0)
+    if lat_scale is not None:
+        per_event_lat = per_event_lat * np.asarray(lat_scale, np.float64)[vp]
+    per_event_lat = per_event_lat * events.weight
     per_pool_lat = np.bincount(pool, weights=per_event_lat, minlength=P)[:P]
     per_host_lat = np.bincount(host, weights=per_event_lat, minlength=H)[:H]
     latency_ns = float(per_event_lat.sum())
@@ -399,6 +409,7 @@ def _analyze_jax(
     weight: jnp.ndarray,  # [N] f32 statistical multiplicity
     host: jnp.ndarray,  # [N] i32 attached-host index (padded entries: 0)
     valid: jnp.ndarray,  # [N] bool
+    lat_scale: jnp.ndarray,  # [V] device-cache latency scale (ones: no cache)
     bits_table: jnp.ndarray,  # [V] i32 per-virtual-pool route word (plan_cascade)
     pool_latency_ns: jnp.ndarray,  # [V] (V = n_hosts * n_pools)
     local_latency_ns: jnp.ndarray,  # []
@@ -432,7 +443,13 @@ def _analyze_jax(
     vp = pool if n_hosts == 1 else host * P + pool
 
     # -- latency ----------------------------------------------------------- #
-    per_event_lat = jnp.maximum(pool_latency_ns[vp] - local_latency_ns, 0.0) * weight
+    # device-cache hits are charged at device-DRAM latency via the per-vp
+    # scale (core/cache.py); ones => bitwise the historical no-cache graph
+    per_event_lat = (
+        jnp.maximum(pool_latency_ns[vp] - local_latency_ns, 0.0)
+        * lat_scale[vp]
+        * weight
+    )
     per_event_lat = jnp.where(valid, per_event_lat, 0.0)
     if fused:
         # one-hot contraction: XLA CPU scatter-add (segment_sum) costs ~10x
@@ -578,6 +595,7 @@ def _analyze_batch_jax(
     host: jnp.ndarray,  # [B, N]
     valid: jnp.ndarray,  # [B, N]
     bw_window_ns: jnp.ndarray,  # [B] per-epoch window length
+    lat_scale: jnp.ndarray,  # [B, V] per-epoch device-cache latency scale
     bits_table: jnp.ndarray,  # [V]
     pool_latency_ns: jnp.ndarray,
     local_latency_ns: jnp.ndarray,
@@ -599,15 +617,15 @@ def _analyze_batch_jax(
     single small transfer per batch.
     """
 
-    def one(t1, pool1, nbytes1, weight1, host1, valid1, bww1):
+    def one(t1, pool1, nbytes1, weight1, host1, valid1, bww1, scale1):
         return _analyze_jax(
-            t1, pool1, nbytes1, weight1, host1, valid1, bits_table,
+            t1, pool1, nbytes1, weight1, host1, valid1, scale1, bits_table,
             pool_latency_ns, local_latency_ns, route, switch_stt_ns, switch_bw,
             stage_order=stage_order, n_windows=n_windows, n_hosts=n_hosts,
             bw_window_ns=bww1, impl=impl, fused=fused, merge_plan=merge_plan,
         )
 
-    xs = (t, pool, nbytes, weight, host, valid, bw_window_ns)
+    xs = (t, pool, nbytes, weight, host, valid, bw_window_ns, lat_scale)
     if impl in ("pallas", "pallas_interpret"):
         outs = jax.lax.map(lambda args: one(*args), xs)
     else:
@@ -676,21 +694,48 @@ class EpochAnalyzer:
             b <<= 1
         return b
 
-    def analyze(self, events: MemEvents) -> DelayBreakdown:
-        return self.analyze_batch([events])
+    def analyze(
+        self, events: MemEvents, lat_scale: Optional[np.ndarray] = None
+    ) -> DelayBreakdown:
+        return self.analyze_batch(
+            [events], None if lat_scale is None else [lat_scale]
+        )
 
-    def analyze_batch(self, traces: Sequence[MemEvents]) -> DelayBreakdown:
-        """Analyze B epochs in one device dispatch; returns summed totals."""
+    def analyze_batch(
+        self,
+        traces: Sequence[MemEvents],
+        lat_scales: Optional[Sequence[Optional[np.ndarray]]] = None,
+    ) -> DelayBreakdown:
+        """Analyze B epochs in one device dispatch; returns summed totals.
+
+        ``lat_scales`` optionally pairs each epoch with a ``[H*P]``
+        device-cache latency-scale vector
+        (:meth:`~repro.core.cache.DeviceCacheModel.latency_scale`); ``None``
+        entries (and padded rows) analyze with the exact no-cache ones
+        vector.
+        """
         P, S = self.flat.n_pools, self.flat.n_switches
         H = self.flat.n_hosts
-        traces = [tr for tr in traces if tr.n]
-        if not traces:
+        if lat_scales is None:
+            lat_scales = [None] * len(traces)
+        elif len(lat_scales) != len(traces):
+            raise ValueError(
+                f"{len(lat_scales)} lat_scales for {len(traces)} traces — "
+                "pass one (possibly None) per epoch"
+            )
+        pairs = [(tr, sc) for tr, sc in zip(traces, lat_scales) if tr.n]
+        if not pairs:
             return DelayBreakdown.zero(P, S, H)
+        traces = [tr for tr, _ in pairs]
         for tr in traces:
             _check_reachable(self.flat, tr)
         n_bucket = self._bucket(max(tr.n for tr in traces))
         b_bucket = self._bucket(len(traces), floor=1)
         buf = self._stager.stage(traces, b_bucket, n_bucket)
+        scale_buf = np.ones((b_bucket, H * P), np.dtype(jnp.dtype(self.dtype).name))
+        for row, (_, sc) in enumerate(pairs):
+            if sc is not None:
+                scale_buf[row] = sc
         # per-epoch window length: n_windows static windows tile each span
         span = np.maximum(buf["span"], self.bw_window_ns)
         bw_window = np.maximum(span / self.n_windows, 1.0)
@@ -702,6 +747,7 @@ class EpochAnalyzer:
             jnp.asarray(buf["host"]),
             jnp.asarray(buf["valid"]),
             jnp.asarray(bw_window, self.dtype),
+            jnp.asarray(scale_buf),
             self._bits_table,
             self._pool_lat,
             self._local_lat,
@@ -762,7 +808,9 @@ class FineGrainedSimulator:
         for v in range(flat.route.shape[0]):
             self._paths.append([s for s in order if flat.route[v, s] > 0])
 
-    def simulate(self, events: MemEvents) -> DelayBreakdown:
+    def simulate(
+        self, events: MemEvents, lat_scale: Optional[np.ndarray] = None
+    ) -> DelayBreakdown:
         flat = self.flat
         P, S, H = flat.n_pools, flat.n_switches, flat.n_hosts
         if events.n == 0:
@@ -774,7 +822,11 @@ class FineGrainedSimulator:
         vpool = hostv * P + pool
         per_event_lat = np.maximum(
             flat.pool_latency_ns[vpool] - flat.local_latency_ns, 0.0
-        ) * ev.weight
+        )
+        if lat_scale is not None:
+            # device-cache epoch summary, same contract as analyze_ref
+            per_event_lat = per_event_lat * np.asarray(lat_scale, np.float64)[vpool]
+        per_event_lat = per_event_lat * ev.weight
         per_pool_lat = np.bincount(pool, weights=per_event_lat, minlength=P)[:P]
         per_host_lat = np.bincount(hostv, weights=per_event_lat, minlength=H)[:H]
 

@@ -3,7 +3,9 @@
 Wraps any jitted step function.  Per step:
 
   1. cut the step's structural trace into epochs (Timer), apply migration
-     remapping and inject coherency traffic (stateful, main thread);
+     remapping, inject coherency traffic, and run the device-cache tag
+     simulation (stateful, main thread) — the cache's per-epoch hit
+     fractions become latency-scale vectors shipped with the batch;
   2. submit the step's epoch batch to the Timing Analyzer — by default
      **asynchronously**: a double-buffered submission queue (depth 2) feeds
      a single worker thread, so the analyzer's device work overlaps the
@@ -48,6 +50,7 @@ import jax
 import numpy as np
 
 from .analyzer import DelayBreakdown, EpochAnalyzer, FineGrainedSimulator
+from .cache import DeviceCacheConfig, DeviceCacheModel
 from .coherency import CoherencyModel
 from .events import MemEvents, RegionMap
 from .migration import MigrationSimulator
@@ -75,6 +78,7 @@ class SimReport:
     per_switch_congestion_ns: Optional[np.ndarray] = None
     per_switch_bandwidth_ns: Optional[np.ndarray] = None
     migration_moved_bytes: float = 0.0
+    cache_hit_fraction: float = float("nan")  # device-cache running hit rate
 
     @property
     def slowdown(self) -> float:
@@ -115,6 +119,7 @@ class CXLMemSim:
         inject_delays: bool = False,
         sample_rate: float = 1.0,
         migration: Optional[MigrationSimulator] = None,
+        cache: Optional[DeviceCacheConfig] = None,
         coherency: Optional[CoherencyModel] = None,
         analyzer: str = "epoch",  # 'epoch' (paper) | 'fine' (Gem5-like baseline)
         n_windows: int = 128,
@@ -130,6 +135,7 @@ class CXLMemSim:
         self.inject_delays = inject_delays
         self.sample_rate = sample_rate
         self.migration = migration
+        self.cache = cache
         self.coherency = coherency
         self.analyzer_kind = analyzer
         self.n_windows = n_windows
@@ -175,8 +181,8 @@ class _AnalysisPipeline:
         import weakref
 
         self._prog = weakref.ref(prog)
-        self._q: "queue.Queue[Optional[Tuple[List[MemEvents], float]]]" = queue.Queue(
-            maxsize=2
+        self._q: "queue.Queue[Optional[Tuple[List[MemEvents], float, Optional[List]]]]" = (
+            queue.Queue(maxsize=2)
         )
         self._error: Optional[BaseException] = None
         self._thread = threading.Thread(
@@ -208,13 +214,15 @@ class _AnalysisPipeline:
                 prog = item = None
                 self._q.task_done()
 
-    def submit(self, traces: List[MemEvents], coh_ns: float) -> None:
+    def submit(
+        self, traces: List[MemEvents], coh_ns: float, scales: Optional[List] = None
+    ) -> None:
         if not self._thread.is_alive():
             raise RuntimeError(
                 "analysis pipeline is closed — step() after close() would "
                 "enqueue work no worker will ever drain"
             )
-        self._q.put((traces, coh_ns))
+        self._q.put((traces, coh_ns, scales))
 
     def flush(self) -> None:
         self._q.join()
@@ -246,6 +254,11 @@ class AttachedProgram:
             self._analyzer = EpochAnalyzer(sim.flat, n_windows=sim.n_windows)
         else:
             self._analyzer = FineGrainedSimulator(sim.flat, bandwidth_mode="per_txn")
+        self._cache = (
+            DeviceCacheModel(sim.cache, sim.flat, [regions])
+            if sim.cache is not None
+            else None
+        )
         self._report = SimReport(
             per_pool_latency_ns=np.zeros((sim.flat.n_pools,)),
             per_switch_congestion_ns=np.zeros((sim.flat.n_switches,)),
@@ -302,15 +315,19 @@ class AttachedProgram:
             self._trace_cache = (traces, native_ns, names)
         return self._trace_cache
 
-    def _epoch_batch(self) -> Tuple[List[MemEvents], float]:
-        """One step's epoch traces with migration/coherency applied.
+    def _epoch_batch(self) -> Tuple[List[MemEvents], float, Optional[List]]:
+        """One step's epoch traces with migration/coherency/cache applied.
 
         Stateful transforms run on the submitting thread so their epoch
-        order is deterministic; only the (pure) analysis is offloaded."""
+        order is deterministic; only the (pure) analysis is offloaded.
+        The device cache observes the *final* per-epoch stream (including
+        injected migration and BI traffic, which warms and pollutes it like
+        any other access) and returns per-epoch latency-scale vectors."""
         traces, _, _ = self._traces()
         from .events import concat_events  # local import to avoid cycle
 
         batch: List[MemEvents] = []
+        scales: Optional[List] = [] if self._cache is not None else None
         coh_ns_total = 0.0
         for tr in traces:
             if self.sim.migration is not None:
@@ -323,10 +340,15 @@ class AttachedProgram:
                 coh_ns_total += coh_ns
                 if bi.n:
                     tr = concat_events([tr, bi])
+            if self._cache is not None:
+                scales.append(self._cache.observe_scale(tr))
+                self._report.cache_hit_fraction = self._cache.hit_fraction
             batch.append(tr)
-        return batch, coh_ns_total
+        return batch, coh_ns_total, scales
 
-    def _analyze_and_accumulate(self, batch: List[MemEvents], coh_ns: float) -> float:
+    def _analyze_and_accumulate(
+        self, batch: List[MemEvents], coh_ns: float, scales: Optional[List] = None
+    ) -> float:
         """Analyze one step's epoch batch and fold it into the report.
 
         Runs on the async worker thread (or inline in sync mode); returns
@@ -334,11 +356,13 @@ class AttachedProgram:
         analyzer's own compute time regardless of overlap."""
         a0 = time.perf_counter()
         if isinstance(self._analyzer, EpochAnalyzer):
-            bd: DelayBreakdown = self._analyzer.analyze_batch(batch)
+            bd: DelayBreakdown = self._analyzer.analyze_batch(batch, scales)
         else:
             bd = DelayBreakdown.zero(self.sim.flat.n_pools, self.sim.flat.n_switches)
-            for tr in batch:
-                bd = bd + self._analyzer.simulate(tr)
+            for i, tr in enumerate(batch):
+                bd = bd + self._analyzer.simulate(
+                    tr, None if scales is None else scales[i]
+                )
         elapsed = time.perf_counter() - a0
         delay_ns = bd.total_ns + coh_ns
         with self._report_lock:
@@ -361,9 +385,9 @@ class AttachedProgram:
         In async mode the step's epoch batch is submitted *before* the
         native dispatch, so the analyzer works while the step executes;
         totals become visible via :attr:`report` (which flushes)."""
-        batch, coh_ns = self._epoch_batch()
+        batch, coh_ns, scales = self._epoch_batch()
         if self._pipeline is not None:
-            self._pipeline.submit(batch, coh_ns)
+            self._pipeline.submit(batch, coh_ns, scales)
 
         t0 = time.perf_counter()
         out = self.step_fn(*args, **kwargs)
@@ -375,7 +399,7 @@ class AttachedProgram:
             self._report.steps += 1
 
         if self._pipeline is None:
-            delay_ns = self._analyze_and_accumulate(batch, coh_ns)
+            delay_ns = self._analyze_and_accumulate(batch, coh_ns, scales)
             if self.sim.inject_delays and delay_ns > 0:
                 # the paper's delay injection: the host program observes the
                 # simulated-topology execution speed

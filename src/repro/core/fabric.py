@@ -21,7 +21,16 @@ storms — only appear when real per-host traces contend on one fabric.
      comes back host-segmented from the same device pass;
   4. **coherency**: sharer sets and write fractions are derived from the
      actual per-host traces (:meth:`CoherencyModel.fabric_traffic`) and BI
-     events are injected into the specific sharers' streams before the merge.
+     events are injected into the specific sharers' streams before the merge;
+  5. **migration** (``migration=MigrationConfig(...)``): every tenant gets
+     its own :class:`~repro.core.migration.MigrationSimulator`, all drawing
+     on **one** shared local-DRAM budget, and their copy traffic lands
+     host-tagged on the shared timeline — a tenant's promotion storm queues
+     at the shared switches and shows up in its neighbors' congestion;
+  6. **device cache** (``cache=DeviceCacheConfig(...)``): one expander-side
+     DRAM cache per shared pool, warmed by the *merged* stream (co-tenants
+     evict each other), feeding per-epoch latency-scale vectors into the
+     same batched analysis.
 
 With one tenant the session degenerates to the single-host pipeline: the
 merged timeline is the tenant's own trace and the analysis is bit-compatible
@@ -44,8 +53,10 @@ import jax
 import numpy as np
 
 from .analyzer import DelayBreakdown, EpochAnalyzer
+from .cache import DeviceCacheConfig, DeviceCacheModel
 from .coherency import CoherencyConfig, CoherencyModel
 from .events import MemEvents, RegionMap, concat_events
+from .migration import LocalBudget, MigrationConfig, MigrationSimulator
 from .policy import PlacementPolicy
 from .timer import EpochSchedule
 from .topology import Topology
@@ -106,6 +117,8 @@ class FabricReport:
     coherency_s: float = 0.0
     analyzer_s: float = 0.0
     bi_messages: float = 0.0
+    migration_moved_bytes: float = 0.0
+    cache_hit_fraction: float = float("nan")
     per_pool_latency_ns: Optional[np.ndarray] = None
     per_switch_congestion_ns: Optional[np.ndarray] = None
     per_switch_bandwidth_ns: Optional[np.ndarray] = None
@@ -148,6 +161,8 @@ class FabricSession:
         epoch: EpochSchedule = EpochSchedule("step"),
         hw: HardwareModel = TPU_V5E,
         coherency: Optional[CoherencyConfig] = None,
+        migration: Optional[MigrationConfig] = None,
+        cache: Optional[DeviceCacheConfig] = None,
         n_windows: int = 128,
         impl: str = "inline",
         check_capacity: bool = True,
@@ -207,7 +222,30 @@ class FabricSession:
         if check_capacity:
             self._fabric_capacity_check()
 
+        # per-tenant migration simulators drawing on ONE local-DRAM budget:
+        # in the pooling rack the local tier is the scarce resource, so
+        # co-tenants' promotions compete for it (a policy-study knob); each
+        # simulator still owns its tenant's hotness state and emits copy
+        # traffic host-tagged onto the shared timeline, where it contends
+        # at shared switches like any other traffic.
+        self._migration: List[Optional[MigrationSimulator]] = [None] * H
+        if migration is not None and migration.mode != "off":
+            shared_budget = LocalBudget(migration.local_budget_bytes)
+            self._migration = [
+                MigrationSimulator(
+                    migration, t.regions, self.flat, host=h, budget=shared_budget
+                )
+                for h, t in enumerate(self.tenants)
+            ]
+        self._has_migration = any(s is not None for s in self._migration)
+        self._cache = (
+            DeviceCacheModel(cache, self.flat, [t.regions for t in self.tenants])
+            if cache is not None
+            else None
+        )
+
         self._trace_cache: List[Optional[tuple]] = [None] * H
+        self._native_cache: List[Optional[float]] = [None] * H
         self._round_cache: Optional[tuple] = None
         self.report = FabricReport(
             hosts=[HostClock(h, t.name) for h, t in enumerate(self.tenants)],
@@ -286,30 +324,41 @@ class FabricSession:
                     tr.sample(t.sample_rate, seed=i) for i, tr in enumerate(traces)
                 ]
             traces = [tr.with_host(h) for tr in traces]
-            self._trace_cache[h] = (traces, float(sum(native_ns)) * 1e-9)
+            if self._native_cache[h] is None:
+                # native pacing depends on phase flops/bytes only, never on
+                # residency, so it survives migration-forced re-synthesis
+                self._native_cache[h] = float(sum(native_ns)) * 1e-9
+            self._trace_cache[h] = (traces, self._native_cache[h])
         return self._trace_cache[h]
 
-    def _merged_round(self) -> Tuple[List[MemEvents], np.ndarray]:
+    def _merged_round(self) -> Tuple[List[MemEvents], np.ndarray, Optional[List]]:
         """Align every tenant's epoch stream and merge each aligned group.
 
         Epoch ``k`` of each host starts at the same fabric instant (the
         co-scheduling assumption; DESIGN.md §Fabric discusses the trade).
-        Returns the merged shared-timeline epochs plus per-host coherency
-        miss latency for the round.
+        Returns the merged shared-timeline epochs, per-host coherency miss
+        latency for the round, and (cache mode) per-epoch latency-scale
+        vectors.
 
-        Tenant traces are round-invariant (no migration in fabric mode), so
-        the merged timelines, BI injection, and miss latencies are built
-        once and replayed; only the coherency model's running totals are
-        advanced per round.
+        Without migration or a device cache, tenant traces are
+        round-invariant, so the merged timelines, BI injection, and miss
+        latencies are built once and replayed; only the coherency model's
+        running totals are advanced per round.  Migration makes rounds
+        stateful — each tenant's simulator remaps its stream and injects
+        host-tagged copy traffic before the merge, and residency changes
+        force next round's traces to be re-synthesized — and the device
+        cache's tag state evolves with the merged stream, so either
+        disables the replay cache.
         """
         H = len(self.tenants)
-        if self._round_cache is not None:
+        stateful = self._has_migration or self._cache is not None
+        if self._round_cache is not None and not stateful:
             merged, miss_total, bi_msgs, bi_bytes, miss_sum = self._round_cache
             if self._coherency is not None:
                 self._coherency.bi_messages_total += bi_msgs
                 self._coherency.bi_bytes_total += bi_bytes
                 self._coherency.coherency_delay_total_ns += miss_sum
-            return merged, miss_total
+            return merged, miss_total, None
         coh0 = (
             (0.0, 0.0)
             if self._coherency is None
@@ -318,11 +367,17 @@ class FabricSession:
         per_host = [self._tenant_epochs(h)[0] for h in range(H)]
         n_epochs = max(len(e) for e in per_host)
         merged: List[MemEvents] = []
+        scales: Optional[List] = [] if self._cache is not None else None
         miss_total = np.zeros((H,), np.float64)
         for k in range(n_epochs):
             group = [
                 e[k] if k < len(e) else MemEvents.empty() for e in per_host
             ]
+            for h, sim in enumerate(self._migration):
+                if sim is None or group[h].n == 0:
+                    continue
+                tr, extra = sim.observe_and_migrate(group[h])
+                group[h] = concat_events([tr, extra]) if extra.n else tr
             if self._coherency is not None:
                 bi, miss = self._coherency.fabric_traffic(
                     group, [t.regions for t in self.tenants]
@@ -332,15 +387,23 @@ class FabricSession:
                 ]
                 miss_total += miss
             # traces are already host-tagged; concat + sort onto one timeline
-            merged.append(concat_events(group).sorted_by_time())
-        self._round_cache = (
-            merged,
-            miss_total,
-            (self._coherency.bi_messages_total - coh0[0]) if self._coherency else 0.0,
-            (self._coherency.bi_bytes_total - coh0[1]) if self._coherency else 0.0,
-            float(miss_total.sum()),
-        )
-        return merged, miss_total
+            epoch = concat_events(group).sorted_by_time()
+            if self._cache is not None:
+                scales.append(self._cache.observe_scale(epoch))
+            merged.append(epoch)
+        if self._has_migration:
+            # residency moved: next round's structural traces must re-read
+            # Region.pool (the attach pipeline's migration contract)
+            self._trace_cache = [None] * H
+        if not stateful:
+            self._round_cache = (
+                merged,
+                miss_total,
+                (self._coherency.bi_messages_total - coh0[0]) if self._coherency else 0.0,
+                (self._coherency.bi_bytes_total - coh0[1]) if self._coherency else 0.0,
+                float(miss_total.sum()),
+            )
+        return merged, miss_total, scales
 
     # ------------------------------------------------------------------ #
 
@@ -353,10 +416,10 @@ class FabricSession:
         merged timelines are cached: per-round analyzer overhead is a
         reported quantity (the paper's accounting), matching how
         ``CXLMemSim.attach`` re-analyzes its cached trace each step."""
-        merged, miss_ns = self._merged_round()
+        merged, miss_ns, scales = self._merged_round()
 
         a0 = time.perf_counter()
-        bd = self._analyzer.analyze_batch(merged)
+        bd = self._analyzer.analyze_batch(merged, scales)
         analyzer_s = time.perf_counter() - a0
 
         r = self.report
@@ -369,6 +432,12 @@ class FabricSession:
         r.coherency_s += float(miss_ns.sum()) * 1e-9
         if self._coherency is not None:
             r.bi_messages = self._coherency.bi_messages_total
+        if self._has_migration:
+            r.migration_moved_bytes = sum(
+                s.moved_bytes_total for s in self._migration if s is not None
+            )
+        if self._cache is not None:
+            r.cache_hit_fraction = self._cache.hit_fraction
         r.per_pool_latency_ns += bd.per_pool_latency_ns
         r.per_switch_congestion_ns += bd.per_switch_congestion_ns
         r.per_switch_bandwidth_ns += bd.per_switch_bandwidth_ns

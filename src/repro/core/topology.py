@@ -247,6 +247,10 @@ class FlatTopology:
     pool_latency_ns: np.ndarray  # [H*P] total added latency per access
     pool_bandwidth_gbps: np.ndarray  # [H*P] bottleneck bandwidth on path
     pool_capacity: np.ndarray  # [P] bytes (physical device capacity)
+    # [P] device media latency alone (the leaf component of pool_latency_ns);
+    # the device-cache model (core/cache.py) replaces this component with
+    # the expander's DRAM-cache hit latency on cache hits
+    pool_media_latency_ns: np.ndarray
     local_latency_ns: float
     # route[H*P, S] == 1 iff accesses by host H to pool P traverse switch S
     route: np.ndarray
@@ -284,6 +288,7 @@ class FlatTopology:
         pool_lat = np.zeros((H * P,), np.float64)
         pool_bw = np.zeros((H * P,), np.float64)
         pool_cap = np.zeros((P,), np.float64)
+        pool_media = np.array([p.latency_ns for p in t.pools], np.float64)
         route = np.zeros((H * P, S), np.float64)
         reach = np.ones((H, P), bool)
         sw_index = {s.name: i for i, s in enumerate(t.switches)}
@@ -325,6 +330,7 @@ class FlatTopology:
             pool_latency_ns=pool_lat,
             pool_bandwidth_gbps=pool_bw,
             pool_capacity=pool_cap,
+            pool_media_latency_ns=pool_media,
             local_latency_ns=t.local_dram_latency_ns,
             route=route,
             switch_stt_ns=stt,

@@ -43,7 +43,14 @@ TPU adaptation notes (vs the paper's sequential C++ loop):
     scratch; it is validated in interpret mode (the CPU test/bench path).
     On hosts without a TPU the production analyzer path is the fused
     ``inline`` XLA variant (:func:`repro.kernels.ref.serial_queue_cascade`),
-    which is semantically identical.
+    which is semantically identical;
+  * the cascade is **latency-agnostic**: it queues arrival times only.
+    Device-cache mode (:mod:`repro.core.cache`) reshapes the per-event
+    *latency* through a per-(host, pool) scale vector applied outside the
+    kernel, in :func:`repro.core.analyzer._analyze_jax` — so this one
+    kernel body serves cache-enabled and cache-free analyses alike, and
+    hits still contend at every switch (the cache sits on the expander,
+    behind the fabric).
 """
 
 from __future__ import annotations

@@ -135,6 +135,11 @@ def serial_queue_cascade(
     is charged to the host whose event waited.  Hosts are recovered through
     the cascade's live permutation (``hosts[idx]``), so merges need no extra
     payload.
+
+    The cascade never sees latencies: device-cache latency scaling
+    (:mod:`repro.core.cache`) happens on the caller's side, which is what
+    keeps this oracle — and the Pallas kernel it specifies — identical
+    across cache-enabled and cache-free analyses.
     """
     f32 = t_sorted.dtype
     n = t_sorted.shape[0]

@@ -1,0 +1,431 @@
+"""Vectorized migration engine + device-cache model (ISSUE 3 tentpole):
+vector-vs-loop decision equivalence, weight/host threading, cache hit-rate
+monotonicity, capacity-0 exactness, and migration under a shared fabric."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CACHELINE_BYTES,
+    ClassMapPolicy,
+    CXLMemSim,
+    DeviceCacheConfig,
+    DeviceCacheModel,
+    EpochAnalyzer,
+    MemEvents,
+    MigrationConfig,
+    MigrationSimulator,
+    Phase,
+    Access,
+    FabricSession,
+    RegionMap,
+    Tenant,
+    analyze_ref,
+    figure1_topology,
+    pooled_topology,
+    two_tier_topology,
+)
+
+FLAT = figure1_topology().flatten()
+PAGE = 4096
+
+
+def _random_regions(rng, n=40):
+    """Two identical RegionMaps (decisions mutate Region.pool in place)."""
+    sizes = (rng.integers(1, 600, size=n) * PAGE).tolist()
+    pools = rng.integers(0, FLAT.n_pools, size=n).tolist()
+    maps = []
+    for _ in range(2):
+        rm = RegionMap()
+        for i, (s, p) in enumerate(zip(sizes, pools)):
+            rm.alloc(f"r{i}", int(s), "kvcache", pool=int(p))
+        maps.append(rm)
+    return maps
+
+
+def _trace(rng, n_regions, n_events, pool_vec, weight=None):
+    # skewed: each epoch touches a random half of the regions, so the rest
+    # decay cold — exercising demotions as well as budget-truncated promotions
+    active = rng.choice(n_regions, size=max(n_regions // 2, 1), replace=False)
+    reg = rng.choice(active, size=n_events).astype(np.int32)
+    ev = MemEvents(
+        t_ns=np.sort(rng.uniform(0, 1e5, size=n_events)),
+        pool=pool_vec[reg].astype(np.int32),
+        bytes_=np.full((n_events,), 64.0),
+        is_write=rng.random(n_events) < 0.3,
+        region=reg,
+    )
+    if weight is not None:
+        import dataclasses
+
+        ev = dataclasses.replace(ev, weight=weight)
+    return ev
+
+
+# --------------------------------------------------------------------------- #
+# vectorized decisions == loop reference
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_vector_matches_loop_on_random_regions(seed):
+    rng = np.random.default_rng(seed)
+    rm_v, rm_l = _random_regions(rng)
+    cfg = MigrationConfig(
+        mode="software",
+        promote_threshold=8.0,
+        demote_threshold=3.0,
+        # tight budget so the promotion prefix actually truncates
+        local_budget_bytes=int(sum(r.nbytes for r in rm_v) // 3),
+        demote_pool="cxl_pool2",
+    )
+    sim_v = MigrationSimulator(cfg, rm_v, FLAT)
+    sim_l = MigrationSimulator(cfg, rm_l, FLAT, impl="loop")
+    for _ in range(4):
+        pool_vec = rm_l.pool_vector()
+        tr = _trace(rng, len(rm_v), 3000, pool_vec)
+        out_v, mig_v = sim_v.observe_and_migrate(tr)
+        out_l, mig_l = sim_l.observe_and_migrate(tr)
+        np.testing.assert_array_equal(rm_v.pool_vector(), rm_l.pool_vector())
+        np.testing.assert_array_equal(sim_v._pool, sim_l._pool)
+        assert sim_v.promotions == sim_l.promotions
+        assert sim_v.demotions == sim_l.demotions
+        assert sim_v.moved_bytes_total == sim_l.moved_bytes_total
+        assert mig_v.n == mig_l.n
+        # same aggregate copy traffic per pool (event ordering may differ)
+        P = FLAT.n_pools
+        np.testing.assert_allclose(
+            np.bincount(mig_v.pool, weights=mig_v.bytes_, minlength=P),
+            np.bincount(mig_l.pool, weights=mig_l.bytes_, minlength=P),
+        )
+        np.testing.assert_array_equal(out_v.pool, out_l.pool)
+    assert sim_v.promotions > 0 and sim_v.demotions > 0  # scenario is non-trivial
+
+
+def test_hardware_vector_matches_loop_remap():
+    rng = np.random.default_rng(7)
+    rm_v, rm_l = _random_regions(rng, n=12)
+    cfg = MigrationConfig(
+        mode="hardware", promote_threshold=4.0, reaction_ns=4e4,
+        granularity_bytes=CACHELINE_BYTES, local_budget_bytes=1 << 32,
+    )
+    sim_v = MigrationSimulator(cfg, rm_v, FLAT)
+    sim_l = MigrationSimulator(cfg, rm_l, FLAT, impl="loop")
+    tr = _trace(rng, len(rm_v), 500, rm_l.pool_vector())
+    out_v, _ = sim_v.observe_and_migrate(tr)
+    out_l, _ = sim_l.observe_and_migrate(tr)
+    np.testing.assert_array_equal(out_v.pool, out_l.pool)
+    # mid-epoch remap actually moved post-reaction events
+    assert (out_v.pool != tr.pool).any()
+
+
+# --------------------------------------------------------------------------- #
+# weight / host threading (the PR-2 bug class, fixed here for migration)
+# --------------------------------------------------------------------------- #
+
+
+def test_remap_preserves_weight_and_host():
+    rm = RegionMap()
+    reg = rm.alloc("hot", 1 << 20, "kvcache", pool=1)
+    sim = MigrationSimulator(
+        MigrationConfig(mode="hardware", promote_threshold=1, reaction_ns=3e4,
+                        local_budget_bytes=1 << 30),
+        rm, FLAT, host=2,
+    )
+    n = 300
+    tr = MemEvents(
+        t_ns=np.linspace(0, 1e5, n),
+        pool=np.full((n,), 1, np.int32),
+        bytes_=np.full((n,), 64.0),
+        is_write=np.zeros((n,), bool),
+        region=np.full((n,), reg.rid, np.int32),
+        weight=np.full((n,), 4.0),  # PEBS 1/rate multiplicity
+        host=np.full((n,), 2, np.int32),
+    )
+    remapped, mig = sim.observe_and_migrate(tr)
+    np.testing.assert_array_equal(remapped.weight, tr.weight)
+    np.testing.assert_array_equal(remapped.host, tr.host)
+    np.testing.assert_array_equal(remapped.bytes_, tr.bytes_)
+    assert mig.n > 0
+    assert (mig.host == 2).all()  # copy traffic rides the simulator's host
+    assert (mig.weight == 1.0).all()  # copies are exact traffic, not sampled
+
+
+def test_access_count_refreshed_for_small_maps():
+    """Region.access_count (HotnessTieredPolicy's fallback input) keeps the
+    legacy every-epoch refresh for ordinarily-sized region maps."""
+    rng = np.random.default_rng(5)
+    rm, _ = _random_regions(rng, n=10)
+    sim = MigrationSimulator(MigrationConfig(mode="software"), rm, FLAT)
+    tr = _trace(rng, len(rm), 500, rm.pool_vector())
+    sim.observe_and_migrate(tr)
+    got = np.array([r.access_count for r in rm])
+    np.testing.assert_array_equal(got, sim._hot_ewma)
+    assert got.sum() > 0
+
+
+def test_freed_region_moves_no_bytes():
+    """RegionMap.free() zeroes nbytes in place; the simulator must honor it
+    (no phantom copy traffic or budget charge for dead regions)."""
+    rm = RegionMap()
+    reg = rm.alloc("dead", 8 << 20, "kvcache", pool=1)
+    sim = MigrationSimulator(
+        MigrationConfig(mode="software", promote_threshold=1,
+                        local_budget_bytes=1 << 30),
+        rm, FLAT,
+    )
+    rm.free("dead")
+    n = 100
+    tr = MemEvents.build(
+        np.linspace(0, 1e5, n), [1] * n, [64.0] * n, region=[reg.rid] * n
+    )
+    _, mig = sim.observe_and_migrate(tr)
+    assert sim.moved_bytes_total == 0.0
+    assert mig.total_bytes == 0.0
+    assert sim._budget.used == 0.0
+
+
+def test_analyze_batch_rejects_mismatched_scales():
+    tr = _reuse_setup()[1]
+    with pytest.raises(ValueError, match="lat_scales"):
+        EpochAnalyzer(FLAT).analyze_batch([tr, tr], [None])
+
+
+def test_single_map_cache_on_multi_host_topology():
+    """One attached program + cache on a Topology(n_hosts=2) must work."""
+    flat2 = pooled_topology(n_hosts=2).flatten()
+    rm = RegionMap()
+    reg = rm.alloc("kv", 16 * PAGE, "kvcache", pool=1)
+    model = DeviceCacheModel(
+        DeviceCacheConfig(capacity_bytes=PAGE * 64, line_bytes=PAGE), flat2, [rm]
+    )
+    n = 200
+    tr = MemEvents.build(
+        np.linspace(0, 1e5, n), [1] * n, [float(PAGE)] * n, region=[reg.rid] * n
+    )
+    frac = model.observe(tr)
+    assert frac.shape == (2, 2) and frac[0, 1] > 0 and frac[1].sum() == 0
+
+
+def test_hotness_ewma_is_weight_aware():
+    """100 weight-1 events must decide like 50 weight-2 events (PEBS)."""
+    outs = []
+    for n, w in ((100, 1.0), (50, 2.0)):
+        rm = RegionMap()
+        reg = rm.alloc("kv", 1 << 20, "kvcache", pool=1)
+        sim = MigrationSimulator(
+            MigrationConfig(mode="software", promote_threshold=30,
+                            local_budget_bytes=1 << 30),
+            rm, FLAT,
+        )
+        tr = MemEvents(
+            t_ns=np.linspace(0, 1e5, n),
+            pool=np.full((n,), 1, np.int32),
+            bytes_=np.full((n,), 64.0),
+            is_write=np.zeros((n,), bool),
+            region=np.full((n,), reg.rid, np.int32),
+            weight=np.full((n,), w),
+        )
+        sim.observe_and_migrate(tr)
+        outs.append((sim.promotions, float(sim._hot_ewma[reg.rid])))
+    assert outs[0] == outs[1]
+    assert outs[0][0] == 1  # ewma 50 >= threshold 30
+
+
+# --------------------------------------------------------------------------- #
+# the demotion dead-end (local-born regions) and the demote_pool fix
+# --------------------------------------------------------------------------- #
+
+
+def test_local_born_cold_region_pins_budget_without_demote_pool():
+    rm = RegionMap()
+    rm.alloc("cold_local", 1 << 20, "param", pool=0)
+    hot = rm.alloc("hot_remote", 1 << 20, "kvcache", pool=1)
+    cfg = MigrationConfig(
+        mode="software", promote_threshold=5, demote_threshold=5,
+        local_budget_bytes=(1 << 20) + 1,  # room for exactly one region
+    )
+    sim = MigrationSimulator(cfg, rm, FLAT)
+    n = 200
+    tr = MemEvents.build(
+        np.linspace(0, 1e5, n), [1] * n, [64.0] * n, region=[hot.rid] * n
+    )
+    sim.observe_and_migrate(tr)
+    # dead-end: the cold local-born region can never demote, so the hot
+    # remote region never fits
+    assert sim.demotions == 0 and sim.promotions == 0
+    assert rm["hot_remote"].pool == 1
+
+
+def test_demote_pool_unpins_local_born_cold_regions():
+    rm = RegionMap()
+    rm.alloc("cold_local", 1 << 20, "param", pool=0)
+    hot = rm.alloc("hot_remote", 1 << 20, "kvcache", pool=1)
+    cfg = MigrationConfig(
+        mode="software", promote_threshold=5, demote_threshold=5,
+        local_budget_bytes=(1 << 20) + 1, demote_pool="cxl_pool3",
+    )
+    sim = MigrationSimulator(cfg, rm, FLAT)
+    n = 200
+    tr = MemEvents.build(
+        np.linspace(0, 1e5, n), [1] * n, [64.0] * n, region=[hot.rid] * n
+    )
+    sim.observe_and_migrate(tr)
+    assert rm["cold_local"].pool == FLAT.pool_names.index("cxl_pool3")
+    assert rm["hot_remote"].pool == 0  # freed budget admits the promotion
+    assert sim.demotions == 1 and sim.promotions == 1
+
+
+# --------------------------------------------------------------------------- #
+# device cache: exactness at zero capacity, monotonicity, oracle agreement
+# --------------------------------------------------------------------------- #
+
+
+def _reuse_setup(lines=32, events=600):
+    """One hot region in pool 1 whose working set is ``lines`` cache lines."""
+    rm = RegionMap()
+    reg = rm.alloc("kv", lines * PAGE, "kvcache", pool=1)
+    rng = np.random.default_rng(0)
+    n = events
+    tr = MemEvents(
+        t_ns=np.sort(rng.uniform(0, 1e5, n)),
+        pool=np.full((n,), 1, np.int32),
+        bytes_=np.full((n,), float(PAGE)),
+        is_write=np.zeros((n,), bool),
+        region=np.full((n,), reg.rid, np.int32),
+    )
+    return rm, tr
+
+
+def test_zero_capacity_cache_reproduces_no_cache_exactly():
+    rm, tr = _reuse_setup()
+    an = EpochAnalyzer(FLAT)
+    base = an.analyze(tr)
+    model = DeviceCacheModel(DeviceCacheConfig(capacity_bytes=0), FLAT, [rm])
+    scale = model.latency_scale(model.observe(tr))
+    np.testing.assert_array_equal(scale, np.ones_like(scale))
+    cached = an.analyze(tr, lat_scale=scale)
+    assert cached.latency_ns == base.latency_ns
+    assert cached.congestion_ns == base.congestion_ns
+    assert cached.bandwidth_ns == base.bandwidth_ns
+    np.testing.assert_array_equal(cached.per_pool_latency_ns, base.per_pool_latency_ns)
+
+
+def test_cache_hit_rate_monotone_delay_monotone():
+    cfgs = [
+        DeviceCacheConfig(capacity_bytes=k * PAGE * 64, line_bytes=PAGE, n_sets=64)
+        for k in range(4)
+    ]
+    an = EpochAnalyzer(FLAT)
+    fracs, delays = [], []
+    for cfg in cfgs:
+        rm, tr = _reuse_setup()
+        model = DeviceCacheModel(cfg, FLAT, [rm])
+        total, frac_sum = 0.0, 0.0
+        for _ in range(3):  # warm across epochs: tag state persists
+            frac = model.observe(tr)
+            frac_sum += frac[0, 1]
+            total += an.analyze(tr, lat_scale=model.latency_scale(frac)).total_ns
+        fracs.append(frac_sum)
+        delays.append(total)
+    assert all(b >= a for a, b in zip(fracs, fracs[1:]))  # hit rate up
+    assert all(b <= a for a, b in zip(delays, delays[1:]))  # delay down
+    assert fracs[1] > 0  # working set fits from one way up
+    assert delays[1] < delays[0]  # and that strictly helps
+
+
+def test_scaled_analysis_matches_numpy_oracle():
+    rm, tr = _reuse_setup()
+    model = DeviceCacheModel(
+        DeviceCacheConfig(capacity_bytes=2 * PAGE * 64, line_bytes=PAGE), FLAT, [rm]
+    )
+    scale = model.latency_scale(model.observe(tr))
+    assert (scale < 1.0).any()  # non-trivial scaling under test
+    got = EpochAnalyzer(FLAT).analyze(tr, lat_scale=scale)
+    want = analyze_ref(FLAT, tr, lat_scale=scale)
+    assert got.latency_ns == pytest.approx(want.latency_ns, rel=1e-4)
+    assert got.congestion_ns == pytest.approx(want.congestion_ns, rel=1e-3, abs=1e-6)
+
+
+def test_attach_with_device_cache_lowers_latency():
+    import jax
+    import jax.numpy as jnp
+
+    def build():
+        rm = RegionMap()
+        rm.alloc("w", 1 << 20, "param")
+        rm.alloc("kv", 16 * PAGE, "kvcache")
+        phases = [Phase("fwd", flops=5e8,
+                        accesses=(Access("w", 1 << 20), Access("kv", 1 << 22, True)))]
+        return rm, phases
+
+    step = jax.jit(lambda x: (x * 2).sum())
+    x = jnp.ones((32,))
+    reports = {}
+    for cap in (0, 1 << 24):
+        rm, phases = build()
+        sim = CXLMemSim(
+            two_tier_topology(), ClassMapPolicy({"kvcache": "cxl_pool"}),
+            cache=DeviceCacheConfig(capacity_bytes=cap, line_bytes=PAGE),
+        )
+        prog = sim.attach(step, phases, rm)
+        reports[cap] = prog.run(2, x)
+    assert reports[1 << 24].cache_hit_fraction > 0
+    assert reports[1 << 24].latency_s < reports[0].latency_s
+
+
+# --------------------------------------------------------------------------- #
+# migration under the shared fabric
+# --------------------------------------------------------------------------- #
+
+
+def _fabric_tenant(name, kv_pages, hot=False):
+    rm = RegionMap()
+    rm.alloc("kv_" + name, kv_pages * PAGE, "kvcache")
+    rm.alloc("act_" + name, 1 << 18, "activation")
+    mult = 64 if hot else 1
+    phases = [
+        Phase("fwd", flops=5e8,
+              accesses=(Access("kv_" + name, mult * kv_pages * PAGE, True),
+                        Access("act_" + name, 1 << 18)))
+    ]
+    return Tenant(name, phases, rm, ClassMapPolicy({"kvcache": "shared_pool"}))
+
+
+def test_tenant_migration_raises_neighbor_congestion():
+    topo = pooled_topology(n_hosts=2, cxl_bandwidth_gbps=8.0)
+
+    def run(migration):
+        sess = FabricSession(
+            topo,
+            [_fabric_tenant("mover", 1024, hot=True), _fabric_tenant("victim", 64)],
+            migration=migration,
+        )
+        sess.run(2)
+        return sess
+
+    base = run(None)
+    mig = run(
+        MigrationConfig(mode="software", promote_threshold=2,
+                        local_budget_bytes=1 << 32)
+    )
+    assert mig.report.migration_moved_bytes > 0
+    # the mover's promotion copy traffic queued at the shared switch and
+    # showed up in the *victim's* congestion share
+    assert mig.report.hosts[1].congestion_s > base.report.hosts[1].congestion_s
+
+
+def test_fabric_tenants_share_one_local_budget():
+    topo = pooled_topology(n_hosts=2)
+    sess = FabricSession(
+        topo,
+        [_fabric_tenant("a", 1024, hot=True), _fabric_tenant("b", 1024, hot=True)],
+        migration=MigrationConfig(
+            mode="software", promote_threshold=2,
+            # room for one tenant's kv region (+ both activations), not two
+            local_budget_bytes=1024 * PAGE + (1 << 20),
+        ),
+    )
+    sess.run(2)
+    promoted = sum(s.promotions for s in sess._migration)
+    assert promoted == 1  # the second promotion lost the shared budget race
