@@ -1,0 +1,244 @@
+"""Batched scenario sweep vs the sequential loop -> BENCH_sweep.json.
+
+One fixed workload; K = policies × topology overrides × granularities ×
+device-cache configs scenarios, evaluated two ways:
+
+  * **batched** — :meth:`repro.core.ScenarioSuite.run`: one ``[K, B, N]``
+    stacked jitted dispatch (placement matrix + shared trace skeletons +
+    stacked topology leaves + deduplicated congestion cascades).
+  * **sequential** — the pre-port sweep-surface pattern, one scenario per
+    Python iteration: ``policy.place`` loop, ``synthesize_step_trace``,
+    per-scenario ``EpochAnalyzer.analyze`` dispatch (+ per-scenario cache
+    model), K host round-trips.
+
+Both are warmed before timing, so compile time is excluded from both
+sides.  Accuracy is checked for EVERY scenario against the float64 numpy
+oracle ``analyze_ref`` (windows pinned to the analyzer's static count so
+the comparison measures the sweep stacking, not window discretization).
+
+Acceptance gate (ISSUE 4):
+  * batched >= 5x sequential wall-clock at K = 256,
+  * max relative error vs sequential ``analyze_ref`` <= 1e-4 on every
+    scenario's latency/congestion/bandwidth totals,
+  * exactly one stacked dispatch per ``run``.
+
+``--quick`` (CI smoke) shrinks K; the speedup gate only applies at full
+K = 256 (small K can't amortize, the accuracy/dispatch gates always hold).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import (
+    CACHELINE_BYTES,
+    ClassMapPolicy,
+    DeviceCacheConfig,
+    DeviceCacheModel,
+    EpochAnalyzer,
+    HotnessTieredPolicy,
+    InterleavePolicy,
+    LocalOnlyPolicy,
+    PAGE_BYTES,
+    RegionMap,
+    ScenarioSuite,
+    TopologyOverride,
+    analyze_ref,
+    figure1_topology,
+)
+from repro.core.scenario import Scenario
+from repro.core.topology import flatten_stack
+from repro.core.tracer import Access, Phase, synthesize_step_trace
+
+SPEEDUP_GATE = 5.0
+REL_ERR_GATE = 1e-4
+FULL_K = 256
+
+
+def workload(n_regions: int = 24, n_phases: int = 8, seed: int = 0):
+    """Deterministic synthetic training-step workload (~4k events/epoch)."""
+    rng = np.random.default_rng(seed)
+    rm = RegionMap()
+    classes = ["param", "grad", "opt_state", "kvcache", "activation"]
+    for i in range(n_regions):
+        r = rm.alloc(f"r{i}", int(rng.integers(1 << 16, 1 << 22)), classes[i % 5])
+        r.access_count = float(rng.integers(0, 50))
+    phases = []
+    for pi in range(n_phases):
+        accs = tuple(
+            Access(
+                f"r{int(j)}",
+                float(rng.integers(100_000, 3_000_000)),
+                bool(rng.random() < 0.3),
+            )
+            for j in rng.choice(n_regions, size=8, replace=False)
+        )
+        phases.append(Phase(f"ph{pi}", 5e10, accs))
+    return rm, phases
+
+
+def scenario_grid(rm: RegionMap, k: int) -> List[Scenario]:
+    """policies(4) × overrides(k/32) × granularity(2) × cache(4 of 16)."""
+    total = int(sum(r.nbytes for r in rm))
+    policies = {
+        "local": LocalOnlyPolicy(),
+        "opt_off": ClassMapPolicy({"opt_state": "cxl_pool2", "kvcache": "cxl_pool1"}),
+        "il": InterleavePolicy(["cxl_pool2", "cxl_pool3"], weights=[1, 2]),
+        "hot": HotnessTieredPolicy("cxl_pool1", local_budget_bytes=total // 2),
+    }
+    n_ov = max(k // 16, 1)  # 16 scenarios per override (4 pol x 2 gran x 2 cache)
+    lats = np.linspace(120.0, 400.0, max(n_ov // 4, 1))
+    bws = (8.0, 16.0, 32.0, 64.0)[: max(min(4, n_ov), 1)]
+    overrides = {
+        f"lat{int(l)}_bw{bw:g}": TopologyOverride(
+            pools={
+                "cxl_pool2": {"latency_ns": float(l)},
+                "cxl_pool3": {"latency_ns": float(l)},
+            },
+            switches={"switch1": {"bandwidth_gbps": float(bw)}},
+        )
+        for l in lats
+        for bw in bws
+    }
+    caches = {
+        "nc": None,
+        "c16m": DeviceCacheConfig(capacity_bytes=16 << 20, line_bytes=4096, n_sets=64),
+    }
+    scens = ScenarioSuite.cartesian(
+        policies, overrides, caches, granularities=[CACHELINE_BYTES, PAGE_BYTES]
+    )
+    return scens[:k]
+
+
+def sequential_eval(suite: ScenarioSuite, scens: List[Scenario], rm, phases):
+    """The pre-port loop: K placements, syntheses, dispatches, transfers."""
+    stack = flatten_stack(suite.topology, [s.topology for s in scens])
+    out = []
+    for k, s in enumerate(scens):
+        flat_k = stack.member(k)
+        s.policy.place(rm, suite.base_flat)
+        traces, native, _ = synthesize_step_trace(
+            phases, rm, granularity_bytes=s.policy.granularity_bytes
+        )
+        scale = None
+        if s.cache is not None:
+            model = DeviceCacheModel(s.cache, flat_k, [rm])
+            scale = model.observe_scale(traces[0])
+        an = EpochAnalyzer(flat_k)
+        out.append(an.analyze(traces[0], lat_scale=scale))
+    return out
+
+
+def oracle_errors(suite: ScenarioSuite, scens, rm, phases, res) -> float:
+    """Max relative error of every scenario total vs sequential analyze_ref."""
+    stack = flatten_stack(suite.topology, [s.topology for s in scens])
+    worst = 0.0
+    for k, s in enumerate(scens):
+        flat_k = stack.member(k)
+        s.policy.place(rm, suite.base_flat)
+        traces, _, _ = synthesize_step_trace(
+            phases, rm, granularity_bytes=s.policy.granularity_bytes
+        )
+        tr = traces[0]
+        span = max(float(tr.t_ns.max()) + 1.0, suite.bw_window_ns)
+        bww = max(span / suite.n_windows, 1.0)
+        scale = None
+        if s.cache is not None:
+            scale = DeviceCacheModel(s.cache, flat_k, [rm]).observe_scale(tr)
+        ref = analyze_ref(
+            flat_k, tr, bw_window_ns=bww, lat_scale=scale, n_windows=suite.n_windows
+        )
+        got = res.breakdowns[k]
+        for f in ("latency_ns", "congestion_ns", "bandwidth_ns"):
+            a, b = getattr(got, f), getattr(ref, f)
+            worst = max(worst, abs(a - b) / max(abs(b), 1.0))
+    return worst
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--k", type=int, default=FULL_K)
+    ap.add_argument("--quick", action="store_true", help="CI smoke: K=32")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_sweep.json")
+    args = ap.parse_args(argv)
+    K = 32 if args.quick else args.k
+
+    rm, phases = workload()
+    topo = figure1_topology()
+    suite = ScenarioSuite(topo, rm, phases)
+    scens = scenario_grid(rm, K)
+    K = len(scens)
+
+    # warm both paths (compile/caches out of the timed region)
+    res = suite.run(scens)
+    sequential_eval(suite, scens, rm, phases)
+
+    dispatches_before = suite.dispatch_count
+    compiles_before = suite.compile_cache_size()
+    t_batch = []
+    for _ in range(args.repeats):
+        t0 = time.perf_counter()
+        res = suite.run(scens)
+        t_batch.append(time.perf_counter() - t0)
+    dispatches_timed = suite.dispatch_count - dispatches_before
+    compiles_timed = suite.compile_cache_size() - compiles_before
+    t_seq = []
+    for _ in range(max(args.repeats // 2, 1)):
+        t0 = time.perf_counter()
+        seq = sequential_eval(suite, scens, rm, phases)
+        t_seq.append(time.perf_counter() - t0)
+
+    batch_s, seq_s = min(t_batch), min(t_seq)
+    speedup = seq_s / batch_s
+    max_rel = oracle_errors(suite, scens, rm, phases, res)
+    # sweep-kernel dispatches are counted at the jitted callable, so any
+    # extra dispatch path inside run() trips this; zero compile-cache
+    # growth across timed runs means no per-scenario jit/compile either
+    one_dispatch = dispatches_timed == args.repeats and compiles_timed == 0
+
+    gates = {
+        "one_stacked_dispatch_per_run": bool(one_dispatch),
+        "max_rel_err_le_1e-4": bool(max_rel <= REL_ERR_GATE),
+        "speedup_ge_5x_at_k256": bool(speedup >= SPEEDUP_GATE) if K >= FULL_K else None,
+    }
+    ok = all(v for v in gates.values() if v is not None)
+
+    record = {
+        "bench": "scenario_sweep",
+        "platform": platform.platform(),
+        "python": sys.version.split()[0],
+        "k": K,
+        "epochs": suite.skeleton_for(CACHELINE_BYTES).n_epochs,
+        "events_per_epoch_bucket": int(
+            suite._staged[next(iter(suite._staged))]["t"].shape[1]
+        ),
+        "unique_cascades": suite.last_unique_cascades,
+        "dispatches_during_timed_runs": dispatches_timed,
+        "compiles_during_timed_runs": compiles_timed,
+        "batched_s": batch_s,
+        "sequential_s": seq_s,
+        "speedup": speedup,
+        "max_rel_err_vs_analyze_ref": max_rel,
+        "gates": gates,
+        "pass": bool(ok),
+        "best_scenario": res.scenarios[res.best()].label() if res.best() is not None else None,
+    }
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=1)
+    print(json.dumps(record, indent=1))
+    if not ok:
+        print("ACCEPTANCE GATE FAILED", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,6 +5,10 @@ procurement").
 One fixed workload (a training step of a zoo config), priced against:
   topologies × placement policies × management granularities
 with the full three-delay decomposition per cell.
+
+Ported to :class:`~repro.core.ScenarioSuite`: each base topology structure
+evaluates its whole policy × granularity grid in ONE stacked device
+dispatch (3 dispatches total here, vs one per cell before).
 """
 
 from __future__ import annotations
@@ -12,18 +16,15 @@ from __future__ import annotations
 from typing import Dict, List
 
 from repro.core import (
-    CACHELINE_BYTES,
     PAGE_BYTES,
-    CXLMemSim,
     ClassMapPolicy,
     InterleavePolicy,
     LocalOnlyPolicy,
+    ScenarioSuite,
     figure1_topology,
     local_only_topology,
     two_tier_topology,
 )
-from repro.core.analyzer import EpochAnalyzer
-from repro.core.tracer import synthesize_step_trace
 from repro.models.phases import build_regions_and_phases
 
 import repro.configs as cfgs
@@ -31,6 +32,7 @@ import repro.configs as cfgs
 
 def run(arch: str = "qwen3-0.6b") -> List[Dict]:
     cfg = cfgs.get_smoke(arch)
+    regions, phases = build_regions_and_phases(cfg, "train", batch=8, seq=256)
     rows = []
     topos = {
         "local_only": local_only_topology(),
@@ -50,23 +52,19 @@ def run(arch: str = "qwen3-0.6b") -> List[Dict]:
                 policies["interleave"] = InterleavePolicy(
                     remote, classes=["opt_state", "grad"]
                 )
-        for pol_name, pol in policies.items():
-            regions, phases = build_regions_and_phases(cfg, "train", batch=8, seq=256)
-            pol.place(regions, flat)
-            traces, native_ns, _ = synthesize_step_trace(
-                phases, regions, granularity_bytes=pol.granularity_bytes
-            )
-            an = EpochAnalyzer(flat)
-            bd = an.analyze(traces[0])
+        suite = ScenarioSuite(topo, regions, phases)
+        scens = ScenarioSuite.cartesian(policies)
+        res = suite.run(scens)  # the whole policy grid: one dispatch
+        for s, bd, slow in zip(res.scenarios, res.breakdowns, res.slowdowns()):
             rows.append(
                 {
                     "topology": topo_name,
-                    "policy": pol_name,
-                    "native_ms": native_ns[0] / 1e6,
+                    "policy": s.name.split("/")[1],
+                    "native_ms": res.native_ns / 1e6,
                     "latency_ms": bd.latency_ns / 1e6,
                     "congestion_ms": bd.congestion_ns / 1e6,
                     "bandwidth_ms": bd.bandwidth_ns / 1e6,
-                    "slowdown": (native_ns[0] + bd.total_ns) / native_ns[0],
+                    "slowdown": float(slow),
                 }
             )
     return rows

@@ -42,16 +42,23 @@ from .policy import (
     InterleavePolicy,
     LocalOnlyPolicy,
     PlacementPolicy,
+    RegionArrays,
+    assign_batch,
+    bytes_per_pool_batch,
     capacity_check,
 )
 from .roofline import RooflineTerms, collective_bytes_from_hlo, roofline_terms
+from .scenario import Scenario, ScenarioSuite, SweepResult
 from .timer import EpochSchedule, slice_by_quantum
 from .topology import (
     FlatTopology,
+    FlatTopologyStack,
     Pool,
     Switch,
     Topology,
+    TopologyOverride,
     figure1_topology,
+    flatten_stack,
     local_only_topology,
     pooled_topology,
     two_tier_topology,
@@ -61,7 +68,10 @@ from .tracer import (
     HardwareModel,
     Phase,
     TPU_V5E,
+    TraceSkeleton,
     hlo_cost_summary,
+    skeleton_to_events,
+    synthesize_skeleton,
     synthesize_step_trace,
 )
 
@@ -83,6 +93,7 @@ __all__ = [
     "FabricSession",
     "FineGrainedSimulator",
     "FlatTopology",
+    "FlatTopologyStack",
     "HostClock",
     "HardwareModel",
     "HotnessTieredPolicy",
@@ -97,27 +108,38 @@ __all__ = [
     "PlacementPolicy",
     "Pool",
     "Region",
+    "RegionArrays",
     "RegionMap",
     "RooflineTerms",
+    "Scenario",
+    "ScenarioSuite",
     "SimReport",
+    "SweepResult",
     "Switch",
     "TPU_V5E",
     "Tenant",
     "Topology",
+    "TopologyOverride",
+    "TraceSkeleton",
     "analyze_ref",
+    "assign_batch",
+    "bytes_per_pool_batch",
     "capacity_check",
     "collective_bytes_from_hlo",
     "concat_events",
     "figure1_topology",
+    "flatten_stack",
     "hlo_cost_summary",
     "local_only_topology",
     "merge_host_traces",
     "plan_cascade",
     "pooled_topology",
     "roofline_terms",
+    "skeleton_to_events",
     "slice_by_quantum",
     "split_by_host",
     "synthetic_trace",
+    "synthesize_skeleton",
     "synthesize_step_trace",
     "two_tier_topology",
 ]

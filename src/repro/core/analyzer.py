@@ -82,6 +82,7 @@ __all__ = [
     "EpochAnalyzer",
     "FineGrainedSimulator",
     "analyze_ref",
+    "bucket_pow2",
     "plan_cascade",
     "serial_queue_ref",
 ]
@@ -163,6 +164,16 @@ class DelayBreakdown:
 # --------------------------------------------------------------------------- #
 
 
+def bucket_pow2(n: int, floor: int = 16) -> int:
+    """Next power-of-two bucket >= n (>= floor) — the shared padding rule
+    of the epoch analyzer and the scenario suite, so their staged shapes
+    land in the same jit compile-cache entries."""
+    b = floor
+    while b < n:
+        b <<= 1
+    return b
+
+
 def serial_queue_ref(arrival_sorted: np.ndarray, stt: float) -> np.ndarray:
     """Start times of a FIFO queue with constant service time ``stt``.
 
@@ -217,6 +228,7 @@ def analyze_ref(
     events: MemEvents,
     bw_window_ns: float = 10_000.0,
     lat_scale: Optional[np.ndarray] = None,
+    n_windows: Optional[int] = None,
 ) -> DelayBreakdown:
     """Vectorized numpy implementation of the three-delay model (oracle).
 
@@ -231,6 +243,15 @@ def analyze_ref(
     each event's added latency — the device-cache epoch summary.  Hits
     still traverse the fabric, so congestion/bandwidth are deliberately
     unscaled; an all-ones vector is bitwise identical to passing None.
+
+    ``n_windows`` pins the bandwidth-window count, with overflow clamped
+    into the last window — the jitted analyzers' static-window semantics
+    (they cannot grow window counts with the post-congestion span).  Pass
+    the analyzer's ``n_windows`` together with its effective per-epoch
+    ``bw_window_ns`` to compare against the batched/scenario paths at
+    float tolerance instead of window-discretization tolerance.  Default
+    (None) keeps the historical behavior: enough windows to cover the
+    shifted span.
     """
     P, S, H = flat.n_pools, flat.n_switches, flat.n_hosts
     if events.n == 0:
@@ -276,8 +297,11 @@ def analyze_ref(
     # applied, so windows are computed on the shifted times plus the latency
     # component of each event's pool.
     t_obs = t + per_event_lat
-    span = max(float(t_obs.max()) + 1.0, bw_window_ns)
-    n_win = int(np.ceil(span / bw_window_ns))
+    if n_windows is None:
+        span = max(float(t_obs.max()) + 1.0, bw_window_ns)
+        n_win = int(np.ceil(span / bw_window_ns))
+    else:
+        n_win = int(n_windows)
     win = np.minimum((t_obs / bw_window_ns).astype(np.int64), n_win - 1)
     per_switch_bw = np.zeros((S,), np.float64)
     per_host_bw = np.zeros((H,), np.float64)
@@ -570,7 +594,10 @@ def _analyze_jax(
                 contrib, key, num_segments=n_windows * n_hosts
             ).reshape(n_windows, n_hosts, S)
 
-    stretch = jnp.maximum(wbytes / switch_bw[None, :] - bw_window_ns, 0.0)
+    # bw <= 0 means an unconstrained component (analyze_ref skips it)
+    bw_safe = jnp.where(switch_bw > 0, switch_bw, 1.0)
+    stretch = jnp.maximum(wbytes / bw_safe[None, :] - bw_window_ns, 0.0)
+    stretch = jnp.where(switch_bw[None, :] > 0, stretch, 0.0)
     per_switch_bw_d = stretch.sum(axis=0)
     bandwidth = per_switch_bw_d.sum()
     if n_hosts == 1:
@@ -633,6 +660,185 @@ def _analyze_batch_jax(
     return jax.tree.map(lambda x: x.sum(axis=0), outs)
 
 
+def _analyze_sweep_jax(
+    t: jnp.ndarray,  # [G, B, N] f32 sorted epoch times per granularity group
+    nbytes: jnp.ndarray,  # [G, B, N]
+    weight: jnp.ndarray,  # [G, B, N]
+    host: jnp.ndarray,  # [G, B, N]
+    valid: jnp.ndarray,  # [G, B, N]
+    region: jnp.ndarray,  # [G, B, N] i32 region ids (skeleton payload)
+    bw_window: jnp.ndarray,  # [G, B] per-epoch window lengths
+    cas_group: jnp.ndarray,  # [U] i32 cascade -> skeleton group
+    cas_assign: jnp.ndarray,  # [U, R] i32 placement rows of unique cascades
+    cas_stt: jnp.ndarray,  # [U, S] stt rows of unique cascades
+    group_of: jnp.ndarray,  # [K] i32 scenario -> skeleton group
+    cascade_of: jnp.ndarray,  # [K] i32 scenario -> unique cascade
+    assign: jnp.ndarray,  # [K, R] i32 placement matrix
+    lat_scale: jnp.ndarray,  # [K, B, V] per-scenario device-cache scales
+    pool_latency_ns: jnp.ndarray,  # [K, V] stacked topology leaves
+    local_latency_ns: jnp.ndarray,  # [K]
+    switch_bw: jnp.ndarray,  # [K, S]
+    bits_table: jnp.ndarray,  # [V] shared (structure)
+    route: jnp.ndarray,  # [V, S] shared (structure)
+    stage_order: Tuple[int, ...],  # static
+    n_windows: int,  # static
+    n_hosts: int,  # static
+    merge_plan=None,  # static
+):
+    """K scenarios × B epochs in ONE dispatch, per-scenario totals on device.
+
+    Two phases, both inside the same jitted graph:
+
+    1. **U unique cascades.**  Congestion — and the post-queue times the
+       bandwidth windows are computed on — depends only on (trace skeleton,
+       per-event route bits, per-stage STT), i.e. on the scenario's
+       granularity group, placement row and STT row.  Latency and
+       bandwidth-capacity overrides, cache configs, and policy duplicates
+       all collapse onto the same cascade, so the expensive fused scan
+       (and its inter-stage merges) runs once per *unique* triple: a
+       256-scenario latency×policy sweep typically runs a handful of
+       cascades.  The host computes the dedup (``cascade_of``); worst case
+       ``U == K`` and nothing is lost.
+    2. **K scenario reductions.**  Each scenario gathers its cascade's
+       slot-ordered outputs, derives per-event pools **on device** from its
+       row of the placement matrix (the cheap pool-gather), prices latency
+       against its row of the stacked topology leaves (+ cache scale), and
+       windows bandwidth on the shared post-congestion times.  Cheap
+       elementwise/gather/segment-sum work only — no sorts, no scans.
+
+    Structure — route matrix, route-word table, stage order, merge plan —
+    is shared by construction (:class:`~repro.core.topology.
+    FlatTopologyStack`), so the whole stack compiles once regardless of K,
+    and per-scenario breakdowns are reduced over epochs on device: the
+    host sees one ``[K, ...]`` transfer for the entire sweep.
+    """
+    from repro.kernels import ops as kops  # deferred: avoid cycles
+
+    f32 = t.dtype
+    V = pool_latency_ns.shape[1]
+    P = V // n_hosts
+    S = switch_bw.shape[1]
+    stage_arr = jnp.asarray(stage_order, jnp.int32)
+    big = jnp.asarray(jnp.finfo(f32).max / 4, f32)
+    has_merges = merge_plan is None or any(len(ops) for ops in merge_plan)
+
+    # -- phase 1: the U unique congestion cascades -------------------------- #
+    def one_cascade(g, assign_u, stt_u):
+        tg, vg, rg, hg = t[g], valid[g], region[g], host[g]
+        pool_u = jnp.where(vg, assign_u[rg], 0)
+        vp_u = pool_u if n_hosts == 1 else hg * P + pool_u
+        bits_u = jnp.where(vg, bits_table[vp_u], 0)
+
+        def per_epoch(t1, bits1, v1, h1):
+            t_cur = jnp.where(v1, t1, big)
+            return kops.congestion_cascade(
+                t_cur, bits1, stt_u[stage_arr], impl="ref",
+                merge_plan=merge_plan,
+                hosts=None if n_hosts == 1 else h1, n_hosts=n_hosts,
+            )
+
+        t_fin, slot_idx, psd = jax.vmap(per_epoch)(tg, bits_u, vg, hg)
+        if has_merges:
+            # slot-order payloads, gathered once per cascade (not per
+            # scenario): slot k of epoch b held input event slot_idx[b, k]
+            ga = lambda x: jnp.take_along_axis(x, slot_idx, axis=1)
+            region_e = ga(rg)
+            nbytes_e, weight_e = ga(nbytes[g]), ga(weight[g])
+            valid_e, host_e = ga(vg), ga(hg)
+        else:  # no merges scheduled: slot order == input order
+            region_e, nbytes_e, weight_e = rg, nbytes[g], weight[g]
+            valid_e, host_e = vg, hg
+        return t_fin, psd, region_e, nbytes_e, weight_e, valid_e, host_e
+
+    cas = jax.vmap(one_cascade)(cas_group, cas_assign, cas_stt)
+    (t_fin_u, psd_u, region_u, nbytes_u, weight_u, valid_u, host_u) = cas
+
+    # -- phase 2: per-scenario latency/bandwidth reductions ----------------- #
+    def per_scenario(u, g, assign_k, scale_k, plat_k, llat_k, sbw_k):
+        t_fin, region_e = t_fin_u[u], region_u[u]
+        nbytes_e, weight_e = nbytes_u[u], weight_u[u]
+        valid_e, host_e = valid_u[u], host_u[u]
+        bwk = bw_window[g]  # [B]
+
+        pool_e = jnp.where(valid_e, assign_k[region_e], 0)
+        vp_e = pool_e if n_hosts == 1 else host_e * P + pool_e
+
+        # latency: pool gather + cache scale (ones => exact no-cache)
+        scale_e = jnp.take_along_axis(scale_k, vp_e, axis=1)  # [B, N]
+        per_event_lat = (
+            jnp.maximum(plat_k[vp_e] - llat_k, 0.0) * scale_e * weight_e
+        )
+        per_event_lat = jnp.where(valid_e, per_event_lat, 0.0)
+        latency = per_event_lat.sum()
+        pool_onehot = (pool_e[:, :, None] == jnp.arange(P, dtype=pool_e.dtype)).astype(f32)
+        per_pool_lat = jnp.einsum("bn,bnp->p", per_event_lat, pool_onehot)
+        if n_hosts == 1:
+            per_host_lat = latency[None]
+        else:
+            host_onehot = (host_e[:, :, None] == jnp.arange(n_hosts, dtype=host_e.dtype)).astype(f32)
+            per_host_lat = jnp.einsum("bn,bnh->h", per_event_lat, host_onehot)
+
+        # congestion: shared with every scenario of the same cascade
+        psd = psd_u[u]  # [B, S_stages] or [B, S_stages, H]
+        if n_hosts == 1:
+            per_switch_cong = jnp.zeros((S,), f32).at[stage_arr].set(psd.sum(axis=0))
+            congestion = per_switch_cong.sum()
+            per_host_cong = congestion[None]
+        else:
+            per_switch_cong = jnp.zeros((S,), f32).at[stage_arr].set(
+                psd.sum(axis=(0, 2))
+            )
+            per_host_cong = psd.sum(axis=(0, 1))
+            congestion = per_switch_cong.sum()
+
+        # bandwidth: windows on the shared post-congestion times + this
+        # scenario's latency component, one segment-sum per scenario
+        t_obs = jnp.where(valid_e, t_fin + per_event_lat, 0.0)
+        win = jnp.minimum((t_obs / bwk[:, None]).astype(jnp.int32), n_windows - 1)
+        win = jnp.where(valid_e, win, n_windows - 1)
+        B = t_obs.shape[0]
+        b_ix = jnp.arange(B, dtype=jnp.int32)[:, None]
+        key = (b_ix * n_windows + win) * V + vp_e
+        wp = jax.ops.segment_sum(
+            jnp.where(valid_e, nbytes_e, 0.0).reshape(-1),
+            key.reshape(-1),
+            num_segments=B * n_windows * V,
+        ).reshape(B, n_windows, V)
+        if n_hosts == 1:
+            wbytes = wp @ route  # [B, W, S]
+            wbytes_h = None
+        else:
+            wph = wp.reshape(B, n_windows, n_hosts, P)
+            route_h = route.reshape(n_hosts, P, S)
+            wbytes_h = jnp.einsum("bwhp,hps->bwhs", wph, route_h)
+            wbytes = wbytes_h.sum(axis=2)
+        # bw <= 0 means an unconstrained component (analyze_ref skips it);
+        # unguarded 0/0 windows would poison totals with NaN
+        sbw_safe = jnp.where(sbw_k > 0, sbw_k, 1.0)
+        stretch = jnp.maximum(
+            wbytes / sbw_safe[None, None, :] - bwk[:, None, None], 0.0
+        )
+        stretch = jnp.where(sbw_k[None, None, :] > 0, stretch, 0.0)
+        per_switch_bw = stretch.sum(axis=(0, 1))
+        bandwidth = per_switch_bw.sum()
+        if n_hosts == 1:
+            per_host_bw = bandwidth[None]
+        else:
+            denom = jnp.maximum(wbytes, jnp.asarray(1e-30, f32))
+            per_host_bw = jnp.einsum("bws,bwhs->h", stretch / denom, wbytes_h)
+
+        return (
+            latency, congestion, bandwidth,
+            per_pool_lat, per_switch_cong, per_switch_bw,
+            per_host_lat, per_host_cong, per_host_bw,
+        )
+
+    return jax.vmap(per_scenario)(
+        cascade_of, group_of, assign, lat_scale, pool_latency_ns,
+        local_latency_ns, switch_bw,
+    )
+
+
 class EpochAnalyzer:
     """Jitted epoch analyzer with bucketed padding and epoch batching.
 
@@ -687,12 +893,7 @@ class EpochAnalyzer:
             ),
         )
 
-    @staticmethod
-    def _bucket(n: int, floor: int = 16) -> int:
-        b = floor
-        while b < n:
-            b <<= 1
-        return b
+    _bucket = staticmethod(bucket_pow2)
 
     def analyze(
         self, events: MemEvents, lat_scale: Optional[np.ndarray] = None

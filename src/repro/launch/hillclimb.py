@@ -1,10 +1,3 @@
-import os
-
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", "")
-)
-
 """§Perf hillclimb driver: run named variants of a dry-run cell and compare
 their roofline terms.
 
@@ -14,7 +7,21 @@ narrates the hypothesis → change → before/after → verdict log.
 
     PYTHONPATH=src python -m repro.launch.hillclimb --cell granite-moe-3b-a800m:train_4k \
         --variant baseline --variant compress_grads
+
+For CXL placement/topology hillclimbs, use the batched
+:meth:`repro.core.ScenarioSuite.successive_halving` instead (one stacked
+device dispatch per round; see ``examples/topology_explorer.py``).
 """
+
+# NOTE: the XLA_FLAGS mutation must come AFTER the docstring (a statement
+# before it would make __doc__ None and empty `-m` help) but BEFORE any jax
+# import, so the host platform exposes enough virtual devices for the mesh.
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
 
 import argparse
 import dataclasses
