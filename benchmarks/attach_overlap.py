@@ -1,0 +1,248 @@
+"""Shared-engine attach throughput -> BENCH_attach.json perf/fidelity record.
+
+Two measurements of the ISSUE-5 engine:
+
+  1. **cross-session batching** (gated): N trace-only ``FabricSession``s on
+     equal topologies, driven round-robin.  Baseline analyzes each round
+     synchronously on the critical path (one private dispatch per session
+     per round — the pre-engine behavior); the shared path submits every
+     round to ONE :class:`~repro.core.engine.AnalysisEngine`, whose
+     dispatcher coalesces concurrently-pending sessions into stacked
+     ``[K, B, N]`` dispatches.  Gate (full mode): >= 1.5x aggregate
+     round throughput at N=4, with every session's fabric totals matching
+     its synchronous twin within float32 tolerance.
+
+  2. **native overlap** (recorded): one real jitted step attached via
+     ``CXLMemSim`` async vs sync — the analyzer hides behind the step's
+     own execution, so async wall time approaches max(native, analyzer)
+     instead of their sum.
+
+Run: ``PYTHONPATH=src python -m benchmarks.attach_overlap [--quick]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    Access,
+    AnalysisEngine,
+    CXLMemSim,
+    ClassMapPolicy,
+    FabricSession,
+    Phase,
+    RegionMap,
+    Tenant,
+    pooled_topology,
+    two_tier_topology,
+)
+
+SPEEDUP_GATE = 1.5
+TOTALS_RTOL = 1e-5  # float32 accumulation tolerance vs the sync path
+
+
+def _tenant(i: int) -> Tenant:
+    rm = RegionMap()
+    rm.alloc("w", 1 << 22, "param")
+    rm.alloc("kv", 1 << 22, "kvcache")
+    rm.alloc("act", 1 << 20, "activation")
+    phases = [
+        Phase(
+            "fwd",
+            flops=5e8,
+            accesses=(
+                Access("w", 1 << 22),
+                Access("kv", 1 << 22, True),
+                Access("act", 1 << 20, True),
+            ),
+        )
+    ]
+    return Tenant(f"s{i}", phases, rm, ClassMapPolicy({"kvcache": "shared_pool"}))
+
+
+def _sessions(n: int, engine=None, async_analysis=True) -> List[FabricSession]:
+    return [
+        FabricSession(
+            pooled_topology(n_hosts=1, cxl_bandwidth_gbps=8.0),
+            [_tenant(i)],
+            async_analysis=async_analysis,
+            engine=engine,
+        )
+        for i in range(n)
+    ]
+
+
+def _drive(sessions: List[FabricSession], rounds: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        for s in sessions:
+            s.round()
+    for s in sessions:
+        s.flush()
+    return time.perf_counter() - t0
+
+
+def bench_cross_session(n_sessions: int, rounds: int, warmup: int) -> Dict:
+    # throwaway warm-up sessions compile the solo [B, N] and stacked
+    # [K, B, N] shapes (jit compile caches are process-global, so the
+    # fresh timed sessions below stay warm) — the timed sessions and the
+    # timed engine stats then cover exactly the measured window
+    _drive(_sessions(n_sessions, async_analysis=False), warmup)
+    with AnalysisEngine() as weng:
+        warm = _sessions(n_sessions, engine=weng)
+        _drive(warm, warmup)
+        for s in warm:
+            s.close()
+
+    # -- private synchronous pipelines (the pre-engine critical path) ------- #
+    sync = _sessions(n_sessions, async_analysis=False)
+    sync_s = _drive(sync, rounds)
+
+    # -- one shared engine, overlapped + coalesced -------------------------- #
+    eng = AnalysisEngine()
+    shared = _sessions(n_sessions, engine=eng)
+    shared_s = _drive(shared, rounds)
+    stats = eng.stats()
+
+    # -- fidelity: each shared session's totals vs its synchronous twin ----- #
+    max_rel = 0.0
+    for s_sync, s_shared in zip(sync, shared):
+        a, b = s_sync.report, s_shared.report
+        for f in ("latency_s", "congestion_s", "bandwidth_s"):
+            va, vb = getattr(a, f), getattr(b, f)
+            denom = max(abs(va), 1e-12)
+            max_rel = max(max_rel, abs(va - vb) / denom)
+    for s in shared:
+        s.close()
+    eng.close()
+
+    speedup = sync_s / shared_s if shared_s > 0 else float("nan")
+    return {
+        "sweep": "cross_session_batching",
+        "sessions": n_sessions,
+        "rounds": rounds,
+        "sync_s": sync_s,
+        "shared_s": shared_s,
+        "speedup": speedup,
+        "rounds_per_s_sync": n_sessions * rounds / sync_s,
+        "rounds_per_s_shared": n_sessions * rounds / shared_s,
+        "coalesced_dispatches": stats["coalesced_dispatches"],
+        "max_coalesced_sessions": stats["max_coalesced_sessions"],
+        "max_rel_err_vs_sync": max_rel,
+    }
+
+
+def bench_native_overlap(steps: int) -> Dict:
+    """One real jitted step: async attach hides analyzer work behind it."""
+    regions = RegionMap()
+    regions.alloc("w", 1 << 24, "param")
+    regions.alloc("opt", 1 << 25, "opt_state")
+    phases = [
+        Phase("fwd", flops=5e9, accesses=(Access("w", 1 << 24),)),
+        Phase("opt", flops=1e8, accesses=(Access("opt", 1 << 25, True),)),
+    ]
+    step = jax.jit(lambda x: (x @ x.T).sum())
+    x = jnp.ones((1024, 1024))
+
+    walls = {}
+    reports = {}
+    for mode in (False, True):
+        sim = CXLMemSim(
+            two_tier_topology(),
+            ClassMapPolicy({"opt_state": "cxl_pool"}),
+            async_analysis=mode,
+        )
+        with sim.attach(step, phases, regions) as prog:
+            prog.run(3, x)  # warm both the step and the analyzer shapes
+            t0 = time.perf_counter()
+            prog.run(steps, x)
+            walls[mode] = time.perf_counter() - t0
+            reports[mode] = prog.report
+    return {
+        "sweep": "native_overlap",
+        "steps": steps,
+        "sync_wall_s": walls[False],
+        "async_wall_s": walls[True],
+        "overlap_gain": walls[False] / walls[True] if walls[True] > 0 else float("nan"),
+        "analyzer_s_async": reports[True].analyzer_s,
+        "native_s_async": reports[True].native_s,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_attach.json")
+    ap.add_argument("--quick", action="store_true", help="small run (CI smoke)")
+    ap.add_argument("--sessions", type=int, default=4)
+    args = ap.parse_args(argv)
+    with open(args.out, "a"):  # fail on an unwritable path up front
+        pass
+
+    if args.quick:
+        rows = [bench_cross_session(args.sessions, rounds=60, warmup=10)]
+        rows.append(bench_native_overlap(steps=5))
+    else:
+        rows = [bench_cross_session(args.sessions, rounds=400, warmup=40)]
+        rows.append(bench_native_overlap(steps=20))
+
+    xs = rows[0]
+    print(
+        f"# cross-session: {xs['sessions']} sessions x {xs['rounds']} rounds — "
+        f"sync {xs['sync_s']:.3f}s, shared {xs['shared_s']:.3f}s, "
+        f"speedup {xs['speedup']:.2f}x "
+        f"(coalesced dispatches {xs['coalesced_dispatches']}, "
+        f"max group {xs['max_coalesced_sessions']}, "
+        f"rel err {xs['max_rel_err_vs_sync']:.2e})"
+    )
+    ov = rows[1]
+    print(
+        f"# native overlap: sync {ov['sync_wall_s']:.3f}s vs async "
+        f"{ov['async_wall_s']:.3f}s ({ov['overlap_gain']:.2f}x; analyzer "
+        f"{ov['analyzer_s_async']:.3f}s off the critical path, native "
+        f"{ov['native_s_async']:.3f}s; recorded, not gated — on a "
+        f"CPU-only host both halves compete for the same cores)"
+    )
+
+    totals_ok = xs["max_rel_err_vs_sync"] <= TOTALS_RTOL
+    coalesced_ok = xs["coalesced_dispatches"] > 0
+    gates = {
+        "totals_match_sync_fp32": bool(totals_ok),
+        "cross_session_coalescing_observed": bool(coalesced_ok),
+        # the 1.5x wall-clock gate applies to the full run only: the quick
+        # (CI smoke) round counts are too short for stable timing
+        "speedup_ge_1p5x_at_n4": (
+            bool(xs["speedup"] >= SPEEDUP_GATE)
+            if not args.quick and xs["sessions"] >= 4
+            else None
+        ),
+    }
+    ok = all(v for v in gates.values() if v is not None)
+    record = {
+        "bench": "attach_overlap",
+        "platform": platform.platform(),
+        "python": sys.version.split()[0],
+        "rows": rows,
+        "gates": gates,
+        "pass": bool(ok),
+    }
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"# acceptance: {gates} -> {'PASS' if ok else 'FAIL'}")
+    print(f"# wrote {args.out}")
+    if not ok:
+        print("ACCEPTANCE GATE FAILED", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

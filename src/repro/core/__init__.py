@@ -5,6 +5,8 @@ Components (paper Figure 2):
   Timer   -> :mod:`repro.core.timer`
   Timing Analyzer -> :mod:`repro.core.analyzer` (epoch, JAX) and the
   fine-grained DES baseline (our Gem5 stand-in)
+  Analysis engine -> :mod:`repro.core.engine` (shared async dispatcher:
+  overlap + cross-session batching for every attached session)
   Topology -> :mod:`repro.core.topology`
   Research surfaces -> :mod:`repro.core.policy` (placement),
   :mod:`repro.core.migration` (sw/hw migration + prefetch),
@@ -22,6 +24,7 @@ from .analyzer import (
 from .attach import AttachedProgram, CXLMemSim, SimReport
 from .cache import DeviceCacheConfig, DeviceCacheModel
 from .coherency import CoherencyConfig, CoherencyModel
+from .engine import AnalysisEngine, EngineHandle
 from .fabric import FabricReport, FabricSession, HostClock, Tenant
 from .events import (
     CACHELINE_BYTES,
@@ -77,9 +80,11 @@ from .tracer import (
 
 __all__ = [
     "Access",
+    "AnalysisEngine",
     "AttachedProgram",
     "CACHELINE_BYTES",
     "CXLMemSim",
+    "EngineHandle",
     "ClassMapPolicy",
     "CoherencyConfig",
     "CoherencyModel",

@@ -81,6 +81,7 @@ __all__ = [
     "DelayBreakdown",
     "EpochAnalyzer",
     "FineGrainedSimulator",
+    "analyze_any",
     "analyze_ref",
     "bucket_pow2",
     "plan_cascade",
@@ -660,6 +661,49 @@ def _analyze_batch_jax(
     return jax.tree.map(lambda x: x.sum(axis=0), outs)
 
 
+def _analyze_multi_jax(
+    t: jnp.ndarray,  # [K, B, N] K sessions' stacked epoch batches
+    pool: jnp.ndarray,  # [K, B, N]
+    nbytes: jnp.ndarray,  # [K, B, N]
+    weight: jnp.ndarray,  # [K, B, N]
+    host: jnp.ndarray,  # [K, B, N]
+    valid: jnp.ndarray,  # [K, B, N]
+    bw_window_ns: jnp.ndarray,  # [K, B]
+    lat_scale: jnp.ndarray,  # [K, B, V]
+    bits_table: jnp.ndarray,  # [V] shared (same topology across sessions)
+    pool_latency_ns: jnp.ndarray,
+    local_latency_ns: jnp.ndarray,
+    route: jnp.ndarray,
+    switch_stt_ns: jnp.ndarray,
+    switch_bw: jnp.ndarray,
+    stage_order: Tuple[int, ...],
+    n_windows: int,
+    n_hosts: int,
+    impl: str = "inline",
+    fused: bool = True,
+    merge_plan=None,
+):
+    """K sessions × B epochs in one dispatch — per-SESSION totals on device.
+
+    The cross-session analogue of :func:`_analyze_batch_jax`: the session
+    axis is a plain vmap over the per-batch analysis (sessions share the
+    route matrix, merge plan and numeric leaves — the same structural-
+    sharing requirement the scenario sweep's ``[K, B, N]`` stack imposes),
+    and each session's epochs are reduced on device, so the host sees one
+    ``[K, ...]`` transfer however many sessions coalesced."""
+
+    def one(t1, pool1, nbytes1, weight1, host1, valid1, bww1, scale1):
+        return _analyze_batch_jax(
+            t1, pool1, nbytes1, weight1, host1, valid1, bww1, scale1,
+            bits_table, pool_latency_ns, local_latency_ns, route,
+            switch_stt_ns, switch_bw,
+            stage_order=stage_order, n_windows=n_windows, n_hosts=n_hosts,
+            impl=impl, fused=fused, merge_plan=merge_plan,
+        )
+
+    return jax.vmap(one)(t, pool, nbytes, weight, host, valid, bw_window_ns, lat_scale)
+
+
 def _analyze_sweep_jax(
     t: jnp.ndarray,  # [G, B, N] f32 sorted epoch times per granularity group
     nbytes: jnp.ndarray,  # [G, B, N]
@@ -886,12 +930,11 @@ class EpochAnalyzer:
             self._stage_order = tuple(int(s) for s in flat.stage_order())
         self._bits_table = jnp.asarray(bits_pool)
         self._stager = EventStager(np.dtype(jnp.dtype(dtype).name))
-        self._batch_fn = jax.jit(
-            _analyze_batch_jax,
-            static_argnames=(
-                "stage_order", "n_windows", "n_hosts", "impl", "fused", "merge_plan",
-            ),
+        _static = (
+            "stage_order", "n_windows", "n_hosts", "impl", "fused", "merge_plan",
         )
+        self._batch_fn = jax.jit(_analyze_batch_jax, static_argnames=_static)
+        self._multi_fn = jax.jit(_analyze_multi_jax, static_argnames=_static)
 
     _bucket = staticmethod(bucket_pow2)
 
@@ -902,21 +945,12 @@ class EpochAnalyzer:
             [events], None if lat_scale is None else [lat_scale]
         )
 
-    def analyze_batch(
+    def _clean_pairs(
         self,
         traces: Sequence[MemEvents],
-        lat_scales: Optional[Sequence[Optional[np.ndarray]]] = None,
-    ) -> DelayBreakdown:
-        """Analyze B epochs in one device dispatch; returns summed totals.
-
-        ``lat_scales`` optionally pairs each epoch with a ``[H*P]``
-        device-cache latency-scale vector
-        (:meth:`~repro.core.cache.DeviceCacheModel.latency_scale`); ``None``
-        entries (and padded rows) analyze with the exact no-cache ones
-        vector.
-        """
-        P, S = self.flat.n_pools, self.flat.n_switches
-        H = self.flat.n_hosts
+        lat_scales: Optional[Sequence[Optional[np.ndarray]]],
+    ) -> List[Tuple[MemEvents, Optional[np.ndarray]]]:
+        """Pair epochs with their scales, drop empties, validate routes."""
         if lat_scales is None:
             lat_scales = [None] * len(traces)
         elif len(lat_scales) != len(traces):
@@ -925,14 +959,37 @@ class EpochAnalyzer:
                 "pass one (possibly None) per epoch"
             )
         pairs = [(tr, sc) for tr, sc in zip(traces, lat_scales) if tr.n]
+        for tr, _ in pairs:
+            _check_reachable(self.flat, tr)
+        return pairs
+
+    def analyze_batch(
+        self,
+        traces: Sequence[MemEvents],
+        lat_scales: Optional[Sequence[Optional[np.ndarray]]] = None,
+        stager: Optional[EventStager] = None,
+    ) -> DelayBreakdown:
+        """Analyze B epochs in one device dispatch; returns summed totals.
+
+        ``lat_scales`` optionally pairs each epoch with a ``[H*P]``
+        device-cache latency-scale vector
+        (:meth:`~repro.core.cache.DeviceCacheModel.latency_scale`); ``None``
+        entries (and padded rows) analyze with the exact no-cache ones
+        vector.  ``stager`` substitutes the caller's staging buffers for
+        the analyzer's own — the shared engine passes its per-engine stager
+        so its dispatcher thread never shares mutable buffers with callers
+        analyzing synchronously on this analyzer.
+        """
+        P, S = self.flat.n_pools, self.flat.n_switches
+        H = self.flat.n_hosts
+        pairs = self._clean_pairs(traces, lat_scales)
         if not pairs:
             return DelayBreakdown.zero(P, S, H)
         traces = [tr for tr, _ in pairs]
-        for tr in traces:
-            _check_reachable(self.flat, tr)
         n_bucket = self._bucket(max(tr.n for tr in traces))
         b_bucket = self._bucket(len(traces), floor=1)
-        buf = self._stager.stage(traces, b_bucket, n_bucket)
+        st = stager if stager is not None else self._stager
+        buf = st.stage(traces, b_bucket, n_bucket)
         scale_buf = np.ones((b_bucket, H * P), np.dtype(jnp.dtype(self.dtype).name))
         for row, (_, sc) in enumerate(pairs):
             if sc is not None:
@@ -975,6 +1032,136 @@ class EpochAnalyzer:
             phc.astype(np.float64),
             phb.astype(np.float64),
         )
+
+    def analyze_batch_multi(
+        self,
+        groups: Sequence[Sequence[MemEvents]],
+        lat_scale_groups: Optional[Sequence[Optional[Sequence]]] = None,
+        stager: Optional[EventStager] = None,
+    ) -> List[DelayBreakdown]:
+        """K sessions' epoch batches → K summed breakdowns, ONE dispatch.
+
+        The multi-session stacked entry point the shared engine coalesces
+        through: ``groups[k]`` is session k's epoch list and comes back as
+        its own :class:`DelayBreakdown`, all from a single ``[K, B, N]``
+        jitted dispatch (sessions vmapped over the per-batch analysis, the
+        same stacking discipline as the scenario sweep — shapes bucketed by
+        :func:`bucket_pow2` on every axis so repeated coalescings reuse the
+        compile cache).  Every session must share this analyzer's topology
+        and window config (the engine's dispatch key guarantees it).
+
+        Restricted to ``impl='inline'``: the session axis vmaps the fused
+        cascade, and only the pure-XLA path is validated under that second
+        vmap (mirroring the scenario suite's restriction).
+        """
+        if self.impl != "inline":
+            raise ValueError(
+                "cross-session stacking requires impl='inline' (the Pallas "
+                "epoch loop is not validated under a session vmap)"
+            )
+        P, S = self.flat.n_pools, self.flat.n_switches
+        H = self.flat.n_hosts
+        K = len(groups)
+        if lat_scale_groups is None:
+            lat_scale_groups = [None] * K
+        elif len(lat_scale_groups) != K:
+            raise ValueError(
+                f"{len(lat_scale_groups)} lat_scale_groups for {K} groups"
+            )
+        cleaned = [
+            self._clean_pairs(traces, scales)
+            for traces, scales in zip(groups, lat_scale_groups)
+        ]
+        out = [DelayBreakdown.zero(P, S, H) for _ in range(K)]
+        rows = [i for i, p in enumerate(cleaned) if p]
+        if not rows:
+            return out
+        if len(rows) == 1:  # degenerate stack: the plain batched path
+            i = rows[0]
+            out[i] = self.analyze_batch(
+                [tr for tr, _ in cleaned[i]],
+                [sc for _, sc in cleaned[i]],
+                stager=stager,
+            )
+            return out
+        n_bucket = self._bucket(
+            max(tr.n for i in rows for tr, _ in cleaned[i])
+        )
+        b_bucket = self._bucket(max(len(cleaned[i]) for i in rows), floor=1)
+        k_bucket = self._bucket(len(rows), floor=1)
+        st = stager if stager is not None else self._stager
+        buf = st.stage_stack(
+            [[tr for tr, _ in cleaned[i]] for i in rows],
+            k_bucket, b_bucket, n_bucket,
+        )
+        scale_buf = np.ones(
+            (k_bucket, b_bucket, H * P), np.dtype(jnp.dtype(self.dtype).name)
+        )
+        for k, i in enumerate(rows):
+            for row, (_, sc) in enumerate(cleaned[i]):
+                if sc is not None:
+                    scale_buf[k, row] = sc
+        span = np.maximum(buf["span"], self.bw_window_ns)
+        bw_window = np.maximum(span / self.n_windows, 1.0)
+        res = self._multi_fn(
+            jnp.asarray(buf["t"]),
+            jnp.asarray(buf["pool"]),
+            jnp.asarray(buf["bytes"]),
+            jnp.asarray(buf["weight"]),
+            jnp.asarray(buf["host"]),
+            jnp.asarray(buf["valid"]),
+            jnp.asarray(bw_window, self.dtype),
+            jnp.asarray(scale_buf),
+            self._bits_table,
+            self._pool_lat,
+            self._local_lat,
+            self._route,
+            self._stt,
+            self._bw,
+            stage_order=self._stage_order,
+            n_windows=self.n_windows,
+            n_hosts=H,
+            impl=self.impl,
+            fused=self.fused,
+            merge_plan=self._merge_plan,
+        )
+        # one [K, ...] transfer for every coalesced session
+        lat, cong, bw, ppl, psc, psb, phl, phc, phb = jax.device_get(res)
+        for k, i in enumerate(rows):
+            out[i] = DelayBreakdown(
+                float(lat[k]),
+                float(cong[k]),
+                float(bw[k]),
+                ppl[k].astype(np.float64),
+                psc[k].astype(np.float64),
+                psb[k].astype(np.float64),
+                phl[k].astype(np.float64),
+                phc[k].astype(np.float64),
+                phb[k].astype(np.float64),
+            )
+        return out
+
+
+def analyze_any(
+    analyzer,
+    traces: Sequence[MemEvents],
+    lat_scales: Optional[Sequence] = None,
+    stager: Optional[EventStager] = None,
+) -> DelayBreakdown:
+    """Run one epoch batch through whichever analyzer a session carries:
+    an :class:`EpochAnalyzer` batches on device; DES-style analyzers
+    (anything with ``.flat`` and ``.simulate``) run per epoch and sum.
+    The single dispatch point shared by the synchronous attach path and
+    the engine's solo-submission path."""
+    if isinstance(analyzer, EpochAnalyzer):
+        return analyzer.analyze_batch(traces, lat_scales, stager=stager)
+    flat = analyzer.flat
+    bd = DelayBreakdown.zero(flat.n_pools, flat.n_switches, flat.n_hosts)
+    for i, tr in enumerate(traces):
+        bd = bd + analyzer.simulate(
+            tr, None if lat_scales is None else lat_scales[i]
+        )
+    return bd
 
 
 # --------------------------------------------------------------------------- #

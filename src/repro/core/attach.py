@@ -7,9 +7,12 @@ Wraps any jitted step function.  Per step:
      simulation (stateful, main thread) — the cache's per-epoch hit
      fractions become latency-scale vectors shipped with the batch;
   2. submit the step's epoch batch to the Timing Analyzer — by default
-     **asynchronously**: a double-buffered submission queue (depth 2) feeds
-     a single worker thread, so the analyzer's device work overlaps the
-     next step's native execution (the paper's low-overhead attach model);
+     **asynchronously** through the shared
+     :class:`~repro.core.engine.AnalysisEngine`: one process-wide
+     dispatcher thread serves every attached session (depth-2 backpressure
+     per session, cross-session coalescing into stacked dispatches), so
+     the analyzer's device work overlaps the next step's native execution
+     (the paper's low-overhead attach model);
   3. dispatch the real step and measure native wall time (the paper's
      "execution of the attached program");
   4. optionally ``time.sleep`` the computed delay — the paper's delay
@@ -20,7 +23,10 @@ Wraps any jitted step function.  Per step:
 All epochs of a step go through :meth:`EpochAnalyzer.analyze_batch` as one
 device dispatch; results cross the host boundary once per step, not once
 per epoch.  Reading :attr:`AttachedProgram.report` flushes any in-flight
-async work first, so observed totals are always consistent.
+async work first, so observed totals are always consistent.  A batch lost
+to an analyzer failure is *accounted*: the error is re-raised once from
+``flush()`` and the report's ``dropped_batches`` / ``dropped_epochs``
+record the truncation permanently.
 
 Two clocks are reported:
 
@@ -31,17 +37,22 @@ plus the per-component delay decomposition, per-pool/switch, per-epoch.
 ``analyzer_s`` stays the analyzer's own compute seconds (the paper's
 overhead accounting) whether or not it overlapped native execution.
 
+``AttachedProgram`` is a context manager; ``with sim.attach(...) as prog``
+(or an explicit ``prog.close()``) releases its engine handle.  The shared
+engine keeps exactly one dispatcher thread for the whole process — attach
+cycles no longer park one worker thread each.
+
 This module attaches **one** program to a private topology.  To co-attach
 several programs on one shared fabric — cross-host contention at shared
 switches, trace-driven coherency — use
 :class:`repro.core.fabric.FabricSession`, which composes the same tracer /
-timer / analyzer stack over a merged multi-host timeline.
+timer / analyzer stack over a merged multi-host timeline (and overlaps its
+rounds through the same shared engine).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import queue
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -49,9 +60,10 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
-from .analyzer import DelayBreakdown, EpochAnalyzer, FineGrainedSimulator
+from .analyzer import DelayBreakdown, EpochAnalyzer, FineGrainedSimulator, analyze_any
 from .cache import DeviceCacheConfig, DeviceCacheModel
 from .coherency import CoherencyModel
+from .engine import AnalysisEngine, EngineClient, EngineHandle
 from .events import MemEvents, RegionMap
 from .migration import MigrationSimulator
 from .policy import PlacementPolicy, capacity_check
@@ -79,6 +91,8 @@ class SimReport:
     per_switch_bandwidth_ns: Optional[np.ndarray] = None
     migration_moved_bytes: float = 0.0
     cache_hit_fraction: float = float("nan")  # device-cache running hit rate
+    dropped_batches: int = 0  # analysis batches lost to analyzer failures
+    dropped_epochs: int = 0  # their epochs: totals exclude exactly these
 
     @property
     def slowdown(self) -> float:
@@ -93,6 +107,8 @@ class SimReport:
         return (self.native_s + self.analyzer_s + self.injected_sleep_s) / self.native_s
 
     def summary(self) -> Dict[str, float]:
+        """The full report contract — every scalar a benchmark JSON consumer
+        needs, key set locked by ``tests/test_engine.py``."""
         return {
             "steps": self.steps,
             "epochs": self.epochs,
@@ -103,7 +119,13 @@ class SimReport:
             "congestion_s": self.congestion_s,
             "bandwidth_s": self.bandwidth_s,
             "coherency_s": self.coherency_s,
+            "injected_sleep_s": self.injected_sleep_s,
             "analyzer_s": self.analyzer_s,
+            "overhead": self.overhead,
+            "migration_moved_bytes": self.migration_moved_bytes,
+            "cache_hit_fraction": self.cache_hit_fraction,
+            "dropped_batches": self.dropped_batches,
+            "dropped_epochs": self.dropped_epochs,
         }
 
 
@@ -126,6 +148,7 @@ class CXLMemSim:
         check_capacity: bool = True,
         max_events_per_access: int = 64,  # trace fidelity (higher = finer)
         async_analysis: Optional[bool] = None,  # None: auto (see below)
+        engine: Optional[AnalysisEngine] = None,  # None: the shared default
     ):
         self.topology = topology
         self.flat = topology.flatten()
@@ -141,6 +164,7 @@ class CXLMemSim:
         self.n_windows = n_windows
         self.check_capacity = check_capacity
         self.max_events_per_access = max_events_per_access
+        self.engine = engine
         # async analysis overlaps analyzer work with native execution; delay
         # injection needs the delay before the step returns, so it forces
         # the synchronous path
@@ -161,82 +185,7 @@ class CXLMemSim:
         return AttachedProgram(self, step_fn, list(phases), regions, calibration)
 
 
-class _AnalysisPipeline:
-    """Double-buffered async analysis: a depth-2 submission queue feeds one
-    worker thread.  ``submit`` blocks only when two step batches are already
-    in flight (backpressure), so analyzer device work overlaps the attached
-    program's native execution.  ``flush`` drains the queue and re-raises
-    the first worker exception (later batches are still analyzed — they are
-    independent — so only the failing batch's epochs are missing from the
-    report, and the raised error announces it).
-
-    The worker holds only a weak reference to its :class:`AttachedProgram`
-    and polls with a timeout, so abandoning a program (without calling
-    ``close``) lets both be garbage-collected instead of leaking one parked
-    thread per ``attach``."""
-
-    _POLL_S = 10.0
-
-    def __init__(self, prog: "AttachedProgram"):
-        import weakref
-
-        self._prog = weakref.ref(prog)
-        self._q: "queue.Queue[Optional[Tuple[List[MemEvents], float, Optional[List]]]]" = (
-            queue.Queue(maxsize=2)
-        )
-        self._error: Optional[BaseException] = None
-        self._thread = threading.Thread(
-            target=self._worker, name="cxlmemsim-analyzer", daemon=True
-        )
-        self._thread.start()
-
-    def _worker(self):
-        while True:
-            try:
-                item = self._q.get(timeout=self._POLL_S)
-            except queue.Empty:
-                if self._prog() is None:  # owner was garbage-collected
-                    return
-                continue
-            if item is None:
-                self._q.task_done()
-                return
-            try:
-                prog = self._prog()
-                if prog is not None:
-                    prog._analyze_and_accumulate(*item)
-            except BaseException as e:  # first error wins; surfaced on flush()
-                if self._error is None:
-                    self._error = e
-            finally:
-                # drop frame locals before blocking on the next get():
-                # a lingering strong ref here would defeat the weakref
-                prog = item = None
-                self._q.task_done()
-
-    def submit(
-        self, traces: List[MemEvents], coh_ns: float, scales: Optional[List] = None
-    ) -> None:
-        if not self._thread.is_alive():
-            raise RuntimeError(
-                "analysis pipeline is closed — step() after close() would "
-                "enqueue work no worker will ever drain"
-            )
-        self._q.put((traces, coh_ns, scales))
-
-    def flush(self) -> None:
-        self._q.join()
-        if self._error is not None:
-            err, self._error = self._error, None
-            raise err
-
-    def close(self) -> None:
-        if self._thread.is_alive():
-            self._q.put(None)
-            self._thread.join()
-
-
-class AttachedProgram:
+class AttachedProgram(EngineClient):
     def __init__(
         self,
         sim: CXLMemSim,
@@ -266,26 +215,21 @@ class AttachedProgram:
         )
         self._report_lock = threading.Lock()
         self._trace_cache: Optional[tuple] = None
-        self._pipeline = _AnalysisPipeline(self) if sim.async_analysis else None
+        if sim.async_analysis:
+            eng = sim.engine if sim.engine is not None else AnalysisEngine.default()
+            self._handle: Optional[EngineHandle] = eng.register(self._analyzer)
+        else:
+            self._handle = None
 
     # ------------------------------------------------------------------ #
 
     @property
     def report(self) -> SimReport:
-        """The accumulated report; flushes in-flight async analysis first."""
+        """The accumulated report; flushes in-flight async analysis first
+        (``flush``/``close``/context-manager semantics come from
+        :class:`~repro.core.engine.EngineClient`)."""
         self.flush()
         return self._report
-
-    def flush(self) -> None:
-        """Block until every submitted epoch batch has been analyzed."""
-        if self._pipeline is not None:
-            self._pipeline.flush()
-
-    def close(self) -> None:
-        """Flush and stop the async analysis worker (idempotent)."""
-        if self._pipeline is not None:
-            self._pipeline.flush()
-            self._pipeline.close()
 
     # ------------------------------------------------------------------ #
 
@@ -334,7 +278,6 @@ class AttachedProgram:
                 tr, extra = self.sim.migration.observe_and_migrate(tr)
                 if extra.n:
                     tr = concat_events([tr, extra])
-                self._report.migration_moved_bytes = self.sim.migration.moved_bytes_total
             if self.sim.coherency is not None:
                 bi, coh_ns = self.sim.coherency.epoch_traffic(tr)
                 coh_ns_total += coh_ns
@@ -342,32 +285,30 @@ class AttachedProgram:
                     tr = concat_events([tr, bi])
             if self._cache is not None:
                 scales.append(self._cache.observe_scale(tr))
-                self._report.cache_hit_fraction = self._cache.hit_fraction
             batch.append(tr)
+        if self.sim.migration is not None or self._cache is not None:
+            # running-statistic snapshots; written under the report lock —
+            # the async dispatcher folds breakdowns under the same lock
+            with self._report_lock:
+                if self.sim.migration is not None:
+                    self._report.migration_moved_bytes = (
+                        self.sim.migration.moved_bytes_total
+                    )
+                if self._cache is not None:
+                    self._report.cache_hit_fraction = self._cache.hit_fraction
         return batch, coh_ns_total, scales
 
-    def _analyze_and_accumulate(
-        self, batch: List[MemEvents], coh_ns: float, scales: Optional[List] = None
+    def _fold(
+        self, bd: DelayBreakdown, coh_ns: float, analyzer_s: float, n_epochs: int
     ) -> float:
-        """Analyze one step's epoch batch and fold it into the report.
+        """Fold one analyzed batch into the report (any thread; locks).
 
-        Runs on the async worker thread (or inline in sync mode); returns
-        the step's total delay in ns.  ``analyzer_s`` accumulates the
-        analyzer's own compute time regardless of overlap."""
-        a0 = time.perf_counter()
-        if isinstance(self._analyzer, EpochAnalyzer):
-            bd: DelayBreakdown = self._analyzer.analyze_batch(batch, scales)
-        else:
-            bd = DelayBreakdown.zero(self.sim.flat.n_pools, self.sim.flat.n_switches)
-            for i, tr in enumerate(batch):
-                bd = bd + self._analyzer.simulate(
-                    tr, None if scales is None else scales[i]
-                )
-        elapsed = time.perf_counter() - a0
+        Returns the batch's total delay in ns.  ``analyzer_s`` accumulates
+        the analyzer's own compute time regardless of overlap."""
         delay_ns = bd.total_ns + coh_ns
         with self._report_lock:
             r = self._report
-            r.epochs += len(batch)
+            r.epochs += n_epochs
             r.latency_s += bd.latency_ns * 1e-9
             r.congestion_s += bd.congestion_ns * 1e-9
             r.bandwidth_s += bd.bandwidth_ns * 1e-9
@@ -376,8 +317,26 @@ class AttachedProgram:
             r.per_switch_congestion_ns += bd.per_switch_congestion_ns
             r.per_switch_bandwidth_ns += bd.per_switch_bandwidth_ns
             r.simulated_s += delay_ns * 1e-9
-            r.analyzer_s += elapsed
+            r.analyzer_s += analyzer_s
         return delay_ns
+
+    def _analyze_and_accumulate(
+        self, batch: List[MemEvents], coh_ns: float, scales: Optional[List] = None
+    ) -> float:
+        """Synchronous path: analyze one step's epoch batch inline and fold
+        it; returns the step's total delay in ns.  A failed batch is
+        recorded as dropped before the error propagates, mirroring the
+        async engine's accounting."""
+        a0 = time.perf_counter()
+        try:
+            bd = analyze_any(self._analyzer, batch, scales)
+        except BaseException:
+            with self._report_lock:
+                self._report.dropped_batches += 1
+                self._report.dropped_epochs += len(batch)
+            raise
+        elapsed = time.perf_counter() - a0
+        return self._fold(bd, coh_ns, elapsed, len(batch))
 
     def step(self, *args, **kwargs):
         """Run one real step under simulation; returns the step's outputs.
@@ -386,8 +345,13 @@ class AttachedProgram:
         native dispatch, so the analyzer works while the step executes;
         totals become visible via :attr:`report` (which flushes)."""
         batch, coh_ns, scales = self._epoch_batch()
-        if self._pipeline is not None:
-            self._pipeline.submit(batch, coh_ns, scales)
+        if self._handle is not None:
+            n_epochs = len(batch)
+            self._handle.submit(
+                batch,
+                scales,
+                fold=lambda bd, elapsed: self._fold(bd, coh_ns, elapsed, n_epochs),
+            )
 
         t0 = time.perf_counter()
         out = self.step_fn(*args, **kwargs)
@@ -398,7 +362,7 @@ class AttachedProgram:
             self._report.simulated_s += native
             self._report.steps += 1
 
-        if self._pipeline is None:
+        if self._handle is None:
             delay_ns = self._analyze_and_accumulate(batch, coh_ns, scales)
             if self.sim.inject_delays and delay_ns > 0:
                 # the paper's delay injection: the host program observes the

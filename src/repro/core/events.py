@@ -221,13 +221,21 @@ class EventStager:
     place — steady-state staging performs zero host allocations, and the
     float64 -> analyzer-dtype conversion happens once, during the fill.
 
-    Not thread-safe: callers serialize ``stage`` calls (the async attach
-    pipeline funnels all analysis through a single worker thread).
+    Not thread-safe: every thread that stages must own its stager.  The
+    shared :class:`~repro.core.engine.AnalysisEngine` owns one stager set
+    per engine (all staging happens on its single dispatcher thread);
+    each :class:`~repro.core.analyzer.EpochAnalyzer` keeps a private
+    stager for callers analyzing synchronously on their own thread —
+    the two never share buffers.
     """
+
+    _FIELDS = ("t", "pool", "bytes", "weight", "host", "valid")
 
     def __init__(self, time_dtype=np.float32):
         self.time_dtype = np.dtype(time_dtype)
         self._bufs: Dict[Tuple[int, int], Dict[str, np.ndarray]] = {}
+        self._stack_bufs: Dict[Tuple[int, int, int], Dict[str, np.ndarray]] = {}
+        self._stack_filled: Dict[Tuple[int, int, int], int] = {}
 
     def buffers(self, b_bucket: int, n_bucket: int) -> Dict[str, np.ndarray]:
         key = (b_bucket, n_bucket)
@@ -261,6 +269,15 @@ class EventStager:
         if len(traces) > b_bucket:
             raise ValueError(f"{len(traces)} traces exceed batch bucket {b_bucket}")
         buf = self.buffers(b_bucket, n_bucket)
+        self._fill_rows(buf, traces, b_bucket)
+        return buf
+
+    @staticmethod
+    def _fill_rows(
+        buf: Dict[str, np.ndarray], traces: Sequence["MemEvents"], b_bucket: int
+    ) -> None:
+        """Fill one ``[B, N]`` buffer view (shared by :meth:`stage` and the
+        per-session planes of :meth:`stage_stack`)."""
         for row in range(b_bucket):
             ev = traces[row] if row < len(traces) else None
             n = ev.n if ev is not None else 0
@@ -290,6 +307,49 @@ class EventStager:
             buf["weight"][row, n:] = 0.0
             buf["host"][row, n:] = 0
             buf["valid"][row, n:] = False
+
+    def stack_buffers(
+        self, k_bucket: int, b_bucket: int, n_bucket: int
+    ) -> Dict[str, np.ndarray]:
+        key = (k_bucket, b_bucket, n_bucket)
+        buf = self._stack_bufs.get(key)
+        if buf is None:
+            flat = self.buffers(b_bucket, n_bucket)  # dtype source of truth
+            buf = {
+                f: np.zeros((k_bucket,) + flat[f].shape, flat[f].dtype)
+                for f in self._FIELDS + ("span",)
+            }
+            self._stack_bufs[key] = buf
+        return buf
+
+    def stage_stack(
+        self,
+        groups: Sequence[Sequence["MemEvents"]],
+        k_bucket: int,
+        b_bucket: int,
+        n_bucket: int,
+    ) -> Dict[str, np.ndarray]:
+        """Fill (in place) and return ``[K, B, N]`` buffers: one plane per
+        epoch batch, each staged under the exact :meth:`stage` contract —
+        the shared engine's cross-session coalescing path.  Planes beyond
+        ``len(groups)`` are all-invalid; only planes a previous (larger)
+        fill dirtied are re-cleared, and clearing touches just the masks
+        the analyzer reads (``valid``/``span``) — stale payload values
+        under an invalid mask are never observable."""
+        if len(groups) > k_bucket:
+            raise ValueError(f"{len(groups)} groups exceed stack bucket {k_bucket}")
+        for g in groups:
+            if len(g) > b_bucket:
+                raise ValueError(f"{len(g)} traces exceed batch bucket {b_bucket}")
+        key = (k_bucket, b_bucket, n_bucket)
+        buf = self.stack_buffers(*key)
+        for k, traces in enumerate(groups):
+            plane = {f: buf[f][k] for f in self._FIELDS + ("span",)}
+            self._fill_rows(plane, traces, b_bucket)
+        for k in range(len(groups), self._stack_filled.get(key, 0)):
+            buf["valid"][k] = False
+            buf["span"][k] = 0.0
+        self._stack_filled[key] = len(groups)
         return buf
 
 

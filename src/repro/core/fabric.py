@@ -41,11 +41,24 @@ real step function, roofline-estimated otherwise), per-host simulated
 seconds (native + that host's delay share), and the fabric-wide contention
 decomposition (latency / congestion / bandwidth / coherency, per switch,
 per pool, per host).
+
+**Overlapped rounds** (default): each round's merged timeline is submitted
+to the shared :class:`~repro.core.engine.AnalysisEngine` *before* the
+tenants' native steps are dispatched, so the analyzer's device work hides
+behind the attached programs' own execution — and concurrently-running
+sessions on equal topologies coalesce into one stacked cross-session
+dispatch.  The stateful pre-analysis transforms (migration, coherency,
+cache) still run on the submitting thread, so async and forced-synchronous
+(``async_analysis=False``) rounds produce bit-equal reports (locked in
+``tests/test_engine.py``).  ``FabricSession`` is a context manager;
+``close()`` (or ``with``) releases its engine handle, and ``run()``
+flushes before returning the report.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -53,6 +66,7 @@ import jax
 import numpy as np
 
 from .analyzer import DelayBreakdown, EpochAnalyzer
+from .engine import AnalysisEngine, EngineClient, EngineHandle
 from .cache import DeviceCacheConfig, DeviceCacheModel
 from .coherency import CoherencyConfig, CoherencyModel
 from .events import MemEvents, RegionMap, concat_events
@@ -83,17 +97,26 @@ class Tenant:
 @dataclasses.dataclass
 class HostClock:
     """Per-host clocks + delay decomposition (the two clocks of the paper,
-    one pair per attached host)."""
+    one pair per attached host).
+
+    ``simulated_s`` is *derived* (native + this host's delay share) rather
+    than accumulated: native seconds fold on the round-driving thread while
+    delay components fold when the engine's dispatcher finishes the round's
+    analysis, and keeping the accumulators disjoint makes the overlapped
+    and synchronous paths bit-equal regardless of interleaving."""
 
     host: int
     name: str
     steps: int = 0
     native_s: float = 0.0
-    simulated_s: float = 0.0
     latency_s: float = 0.0
     congestion_s: float = 0.0
     bandwidth_s: float = 0.0
     coherency_s: float = 0.0
+
+    @property
+    def simulated_s(self) -> float:
+        return self.native_s + self.delay_s
 
     @property
     def slowdown(self) -> float:
@@ -119,6 +142,8 @@ class FabricReport:
     bi_messages: float = 0.0
     migration_moved_bytes: float = 0.0
     cache_hit_fraction: float = float("nan")
+    dropped_batches: int = 0  # round analyses lost to analyzer failures
+    dropped_epochs: int = 0  # their epochs: totals exclude exactly these
     per_pool_latency_ns: Optional[np.ndarray] = None
     per_switch_congestion_ns: Optional[np.ndarray] = None
     per_switch_bandwidth_ns: Optional[np.ndarray] = None
@@ -128,6 +153,8 @@ class FabricReport:
         return self.latency_s + self.congestion_s + self.bandwidth_s + self.coherency_s
 
     def summary(self) -> Dict[str, float]:
+        """Fabric-wide scalars + per-host clocks — the full report contract
+        for benchmark JSON consumers (key set locked in tests)."""
         out = {
             "rounds": self.rounds,
             "epochs": self.epochs,
@@ -137,6 +164,10 @@ class FabricReport:
             "coherency_s": self.coherency_s,
             "bi_messages": self.bi_messages,
             "analyzer_s": self.analyzer_s,
+            "migration_moved_bytes": self.migration_moved_bytes,
+            "cache_hit_fraction": self.cache_hit_fraction,
+            "dropped_batches": self.dropped_batches,
+            "dropped_epochs": self.dropped_epochs,
         }
         for hc in self.hosts:
             out[f"host{hc.host}_native_s"] = hc.native_s
@@ -145,7 +176,7 @@ class FabricReport:
         return out
 
 
-class FabricSession:
+class FabricSession(EngineClient):
     """Co-attach N tenants on one shared topology; see the module docstring.
 
     The topology's ``n_hosts`` must match ``len(tenants)``; as a convenience
@@ -167,6 +198,8 @@ class FabricSession:
         impl: str = "inline",
         check_capacity: bool = True,
         max_events_per_access: int = 64,
+        async_analysis: bool = True,
+        engine: Optional[AnalysisEngine] = None,  # None: the shared default
     ):
         if not tenants:
             raise ValueError("need at least one tenant")
@@ -247,12 +280,27 @@ class FabricSession:
         self._trace_cache: List[Optional[tuple]] = [None] * H
         self._native_cache: List[Optional[float]] = [None] * H
         self._round_cache: Optional[tuple] = None
-        self.report = FabricReport(
+        self._report = FabricReport(
             hosts=[HostClock(h, t.name) for h, t in enumerate(self.tenants)],
             per_pool_latency_ns=np.zeros((self.flat.n_pools,)),
             per_switch_congestion_ns=np.zeros((self.flat.n_switches,)),
             per_switch_bandwidth_ns=np.zeros((self.flat.n_switches,)),
         )
+        self._report_lock = threading.Lock()
+        if async_analysis:
+            eng = engine if engine is not None else AnalysisEngine.default()
+            self._handle: Optional[EngineHandle] = eng.register(self._analyzer)
+        else:
+            self._handle = None
+
+    @property
+    def report(self) -> FabricReport:
+        """The accumulated fabric report; flushes in-flight overlapped
+        rounds first, so reads never observe partially-folded totals
+        (``flush``/``close``/context-manager semantics come from
+        :class:`~repro.core.engine.EngineClient`)."""
+        self.flush()
+        return self._report
 
     # ------------------------------------------------------------------ #
 
@@ -407,63 +455,109 @@ class FabricSession:
 
     # ------------------------------------------------------------------ #
 
-    def round(self) -> DelayBreakdown:
-        """Run one co-scheduled round: every tenant steps once (natively,
-        when it has a step function) and the shared timeline is analyzed in
-        one batched dispatch.  Returns the round's fabric breakdown.
+    def _round_stats(self) -> Tuple:
+        """Snapshot of the stateful models' running totals, captured on the
+        submitting thread right after :meth:`_merged_round` advanced them —
+        the dispatcher folds the *captured* values, so a later round's
+        mutation can never leak into an earlier round's fold."""
+        return (
+            self._coherency.bi_messages_total if self._coherency is not None else None,
+            sum(s.moved_bytes_total for s in self._migration if s is not None)
+            if self._has_migration
+            else None,
+            self._cache.hit_fraction if self._cache is not None else None,
+        )
+
+    def _fold_round(
+        self,
+        bd: DelayBreakdown,
+        miss_ns: np.ndarray,
+        analyzer_s: float,
+        n_epochs: int,
+        stats: Tuple,
+    ) -> None:
+        """Fold one analyzed round into the report (any thread; locks)."""
+        bi_messages, moved_bytes, hit_fraction = stats
+        with self._report_lock:
+            r = self._report
+            r.rounds += 1
+            r.epochs += n_epochs
+            r.analyzer_s += analyzer_s
+            r.latency_s += bd.latency_ns * 1e-9
+            r.congestion_s += bd.congestion_ns * 1e-9
+            r.bandwidth_s += bd.bandwidth_ns * 1e-9
+            r.coherency_s += float(miss_ns.sum()) * 1e-9
+            if bi_messages is not None:
+                r.bi_messages = bi_messages
+            if moved_bytes is not None:
+                r.migration_moved_bytes = moved_bytes
+            if hit_fraction is not None:
+                r.cache_hit_fraction = hit_fraction
+            r.per_pool_latency_ns += bd.per_pool_latency_ns
+            r.per_switch_congestion_ns += bd.per_switch_congestion_ns
+            r.per_switch_bandwidth_ns += bd.per_switch_bandwidth_ns
+            for h, hc in enumerate(r.hosts):
+                hc.latency_s += float(bd.per_host_latency_ns[h]) * 1e-9
+                hc.congestion_s += float(bd.per_host_congestion_ns[h]) * 1e-9
+                hc.bandwidth_s += float(bd.per_host_bandwidth_ns[h]) * 1e-9
+                hc.coherency_s += float(miss_ns[h]) * 1e-9
+
+    def round(self) -> Optional[DelayBreakdown]:
+        """Run one co-scheduled round.  In the default overlapped mode the
+        merged shared timeline is **submitted to the engine before any
+        tenant's native step is dispatched**, so the analyzer's device work
+        hides behind the tenants' own execution (and co-running sessions
+        coalesce); the round's breakdown folds into :attr:`report` when the
+        dispatcher finishes (``flush()``/``run()`` synchronize) and the
+        return value is ``None``.  With ``async_analysis=False`` the
+        analysis runs inline and the breakdown is returned.
 
         The analyzer intentionally re-runs every round even though the
         merged timelines are cached: per-round analyzer overhead is a
         reported quantity (the paper's accounting), matching how
         ``CXLMemSim.attach`` re-analyzes its cached trace each step."""
         merged, miss_ns, scales = self._merged_round()
+        n_epochs = len(merged)
+        stats = self._round_stats()
 
-        a0 = time.perf_counter()
-        bd = self._analyzer.analyze_batch(merged, scales)
-        analyzer_s = time.perf_counter() - a0
-
-        r = self.report
-        r.rounds += 1
-        r.epochs += len(merged)
-        r.analyzer_s += analyzer_s
-        r.latency_s += bd.latency_ns * 1e-9
-        r.congestion_s += bd.congestion_ns * 1e-9
-        r.bandwidth_s += bd.bandwidth_ns * 1e-9
-        r.coherency_s += float(miss_ns.sum()) * 1e-9
-        if self._coherency is not None:
-            r.bi_messages = self._coherency.bi_messages_total
-        if self._has_migration:
-            r.migration_moved_bytes = sum(
-                s.moved_bytes_total for s in self._migration if s is not None
+        bd: Optional[DelayBreakdown] = None
+        if self._handle is not None:
+            self._handle.submit(
+                merged,
+                scales,
+                fold=lambda b, elapsed: self._fold_round(
+                    b, miss_ns, elapsed, n_epochs, stats
+                ),
             )
-        if self._cache is not None:
-            r.cache_hit_fraction = self._cache.hit_fraction
-        r.per_pool_latency_ns += bd.per_pool_latency_ns
-        r.per_switch_congestion_ns += bd.per_switch_congestion_ns
-        r.per_switch_bandwidth_ns += bd.per_switch_bandwidth_ns
+        else:
+            a0 = time.perf_counter()
+            try:
+                bd = self._analyzer.analyze_batch(merged, scales)
+            except BaseException:
+                with self._report_lock:
+                    self._report.dropped_batches += 1
+                    self._report.dropped_epochs += n_epochs
+                raise
+            self._fold_round(bd, miss_ns, time.perf_counter() - a0, n_epochs, stats)
 
+        # tenants' native steps run AFTER the submission: analyzer device
+        # work overlaps the attached programs' own execution
+        natives: List[float] = []
         for h, tenant in enumerate(self.tenants):
-            hc = r.hosts[h]
             if tenant.step_fn is not None:
                 t0 = time.perf_counter()
                 out = tenant.step_fn(*tenant.step_args)
                 jax.block_until_ready(out)
-                native = time.perf_counter() - t0
+                natives.append(time.perf_counter() - t0)
             else:
-                native = self._tenant_epochs(h)[1]
-            delay_s = (
-                float(bd.per_host_total_ns[h]) + float(miss_ns[h])
-            ) * 1e-9
-            hc.steps += 1
-            hc.native_s += native
-            hc.simulated_s += native + delay_s
-            hc.latency_s += float(bd.per_host_latency_ns[h]) * 1e-9
-            hc.congestion_s += float(bd.per_host_congestion_ns[h]) * 1e-9
-            hc.bandwidth_s += float(bd.per_host_bandwidth_ns[h]) * 1e-9
-            hc.coherency_s += float(miss_ns[h]) * 1e-9
+                natives.append(self._tenant_epochs(h)[1])
+        with self._report_lock:
+            for hc, native in zip(self._report.hosts, natives):
+                hc.steps += 1
+                hc.native_s += native
         return bd
 
     def run(self, n_rounds: int) -> FabricReport:
         for _ in range(n_rounds):
             self.round()
-        return self.report
+        return self.report  # the property flushes
