@@ -26,6 +26,15 @@ from .cache import DeviceCacheConfig, DeviceCacheModel
 from .coherency import CoherencyConfig, CoherencyModel
 from .engine import AnalysisEngine, EngineHandle
 from .fabric import FabricReport, FabricSession, HostClock, Tenant
+from .fleet import (
+    FleetPoint,
+    FleetReport,
+    FleetSim,
+    TenantPlacement,
+    TenantSpec,
+    model_zoo_tenant,
+    synthetic_tenant,
+)
 from .events import (
     CACHELINE_BYTES,
     PAGE_BYTES,
@@ -99,6 +108,9 @@ __all__ = [
     "FineGrainedSimulator",
     "FlatTopology",
     "FlatTopologyStack",
+    "FleetPoint",
+    "FleetReport",
+    "FleetSim",
     "HostClock",
     "HardwareModel",
     "HotnessTieredPolicy",
@@ -123,6 +135,8 @@ __all__ = [
     "Switch",
     "TPU_V5E",
     "Tenant",
+    "TenantPlacement",
+    "TenantSpec",
     "Topology",
     "TopologyOverride",
     "TraceSkeleton",
@@ -137,12 +151,14 @@ __all__ = [
     "hlo_cost_summary",
     "local_only_topology",
     "merge_host_traces",
+    "model_zoo_tenant",
     "plan_cascade",
     "pooled_topology",
     "roofline_terms",
     "skeleton_to_events",
     "slice_by_quantum",
     "split_by_host",
+    "synthetic_tenant",
     "synthetic_trace",
     "synthesize_skeleton",
     "synthesize_step_trace",

@@ -79,6 +79,7 @@ from .topology import FlatTopology
 
 __all__ = [
     "DelayBreakdown",
+    "DispatchStats",
     "EpochAnalyzer",
     "FineGrainedSimulator",
     "analyze_any",
@@ -87,6 +88,22 @@ __all__ = [
     "plan_cascade",
     "serial_queue_ref",
 ]
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchStats:
+    """Observability record for the most recent stacked dispatch.
+
+    ``devices_used`` is 1 whenever sharding did not engage; ``shard_rows``
+    is the per-device slice of the (padded) leading axis, 0 when unsharded;
+    ``padded_fraction`` is the fraction of leading-axis rows that were
+    bucket/alignment padding — wasted compute the caller can act on.
+    """
+
+    devices_used: int = 1
+    shard_rows: int = 0
+    rows: int = 0
+    padded_fraction: float = 0.0
 
 
 def _opt_add(a: Optional[np.ndarray], b: Optional[np.ndarray]) -> Optional[np.ndarray]:
@@ -704,6 +721,56 @@ def _analyze_multi_jax(
     return jax.vmap(one)(t, pool, nbytes, weight, host, valid, bw_window_ns, lat_scale)
 
 
+def _analyze_fleet_jax(
+    t: jnp.ndarray,  # [K, B, N] K racks' stacked epoch batches
+    pool: jnp.ndarray,  # [K, B, N]
+    nbytes: jnp.ndarray,  # [K, B, N]
+    weight: jnp.ndarray,  # [K, B, N]
+    host: jnp.ndarray,  # [K, B, N]
+    valid: jnp.ndarray,  # [K, B, N]
+    bw_window_ns: jnp.ndarray,  # [K, B]
+    lat_scale: jnp.ndarray,  # [K, B, V]
+    bits_table: jnp.ndarray,  # [V] shared (one rack structure)
+    pool_latency_ns: jnp.ndarray,  # [K, V] per-rack numeric leaves
+    local_latency_ns: jnp.ndarray,  # [K]
+    route: jnp.ndarray,  # [V, S] shared (structure)
+    switch_stt_ns: jnp.ndarray,  # [K, S]
+    switch_bw: jnp.ndarray,  # [K, S]
+    stage_order: Tuple[int, ...],
+    n_windows: int,
+    n_hosts: int,
+    impl: str = "inline",
+    fused: bool = True,
+    merge_plan=None,
+):
+    """K racks × B epochs in one dispatch, per-RACK numeric topologies.
+
+    The fleet-scale variant of :func:`_analyze_multi_jax`: the leading
+    axis is a rack (its merged multi-tenant timeline), and the *numeric*
+    topology leaves carry the rack axis too — racks may run different
+    expander latencies/bandwidths/STTs (:class:`~repro.core.topology.
+    FlatTopologyStack` rows) while sharing one structure, so the route
+    matrix, route-word table and cascade merge plan stay static and the
+    whole fleet compiles once.  Per-rack epoch reduction happens on
+    device; sharding the rack axis over a ('data',) mesh keeps the host
+    transfer at one ``[K, ...]`` vector.
+    """
+
+    def one(t1, pool1, nbytes1, weight1, host1, valid1, bww1, scale1,
+            plat1, llat1, stt1, sbw1):
+        return _analyze_batch_jax(
+            t1, pool1, nbytes1, weight1, host1, valid1, bww1, scale1,
+            bits_table, plat1, llat1, route, stt1, sbw1,
+            stage_order=stage_order, n_windows=n_windows, n_hosts=n_hosts,
+            impl=impl, fused=fused, merge_plan=merge_plan,
+        )
+
+    return jax.vmap(one)(
+        t, pool, nbytes, weight, host, valid, bw_window_ns, lat_scale,
+        pool_latency_ns, local_latency_ns, switch_stt_ns, switch_bw,
+    )
+
+
 def _analyze_sweep_jax(
     t: jnp.ndarray,  # [G, B, N] f32 sorted epoch times per granularity group
     nbytes: jnp.ndarray,  # [G, B, N]
@@ -905,8 +972,12 @@ class EpochAnalyzer:
         dtype=jnp.float32,
         impl: str = "inline",
         fused: bool = True,
+        mesh=None,
     ):
         self.flat = flat
+        self.mesh = mesh
+        self.last_dispatch = DispatchStats()
+        self.sharded_dispatches = 0
         self.bw_window_ns = float(bw_window_ns)
         self.n_windows = int(n_windows)
         self.dtype = dtype
@@ -997,6 +1068,12 @@ class EpochAnalyzer:
         # per-epoch window length: n_windows static windows tile each span
         span = np.maximum(buf["span"], self.bw_window_ns)
         bw_window = np.maximum(span / self.n_windows, 1.0)
+        self.last_dispatch = DispatchStats(
+            devices_used=1,
+            shard_rows=0,
+            rows=len(traces),
+            padded_fraction=float(b_bucket - len(traces)) / b_bucket,
+        )
         out = self._batch_fn(
             jnp.asarray(buf["t"]),
             jnp.asarray(buf["pool"]),
@@ -1038,6 +1115,7 @@ class EpochAnalyzer:
         groups: Sequence[Sequence[MemEvents]],
         lat_scale_groups: Optional[Sequence[Optional[Sequence]]] = None,
         stager: Optional[EventStager] = None,
+        mesh=None,
     ) -> List[DelayBreakdown]:
         """K sessions' epoch batches → K summed breakdowns, ONE dispatch.
 
@@ -1049,6 +1127,15 @@ class EpochAnalyzer:
         :func:`bucket_pow2` on every axis so repeated coalescings reuse the
         compile cache).  Every session must share this analyzer's topology
         and window config (the engine's dispatch key guarantees it).
+
+        ``mesh`` (defaulting to the analyzer's own) shards the session axis
+        with ``NamedSharding`` over ``('data',)``: the K leading axis is
+        padded to a multiple of the device count so shards stay uniform,
+        stacked inputs are placed pre-sharded, the topology leaves
+        replicate, and per-shard epoch reduction still happens on device —
+        the host transfer stays one ``[K, ...]`` vector regardless of how
+        many devices participate.  With one device (or K == 1) the path is
+        bitwise identical to the unsharded dispatch.
 
         Restricted to ``impl='inline'``: the session axis vmaps the fused
         cascade, and only the pure-XLA path is validated under that second
@@ -1084,11 +1171,20 @@ class EpochAnalyzer:
                 stager=stager,
             )
             return out
+        from repro.distributed.sharding import (
+            pad_to_multiple, replicated, resolve_data_mesh, shard_rows,
+        )
+
+        mesh, n_shards = resolve_data_mesh(
+            mesh if mesh is not None else self.mesh,
+            len(rows),
+            what="coalesced session dispatch",
+        )
         n_bucket = self._bucket(
             max(tr.n for i in rows for tr, _ in cleaned[i])
         )
         b_bucket = self._bucket(max(len(cleaned[i]) for i in rows), floor=1)
-        k_bucket = self._bucket(len(rows), floor=1)
+        k_bucket = pad_to_multiple(self._bucket(len(rows), floor=1), n_shards)
         st = stager if stager is not None else self._stager
         buf = st.stage_stack(
             [[tr for tr, _ in cleaned[i]] for i in rows],
@@ -1103,21 +1199,31 @@ class EpochAnalyzer:
                     scale_buf[k, row] = sc
         span = np.maximum(buf["span"], self.bw_window_ns)
         bw_window = np.maximum(span / self.n_windows, 1.0)
+        self.last_dispatch = DispatchStats(
+            devices_used=n_shards,
+            shard_rows=k_bucket // n_shards if mesh is not None else 0,
+            rows=len(rows),
+            padded_fraction=float(k_bucket - len(rows)) / k_bucket,
+        )
+        if mesh is not None:
+            self.sharded_dispatches += 1
+        put_k = lambda a: shard_rows(mesh, jnp.asarray(a))
+        put_r = lambda a: replicated(mesh, a)
         res = self._multi_fn(
-            jnp.asarray(buf["t"]),
-            jnp.asarray(buf["pool"]),
-            jnp.asarray(buf["bytes"]),
-            jnp.asarray(buf["weight"]),
-            jnp.asarray(buf["host"]),
-            jnp.asarray(buf["valid"]),
-            jnp.asarray(bw_window, self.dtype),
-            jnp.asarray(scale_buf),
-            self._bits_table,
-            self._pool_lat,
-            self._local_lat,
-            self._route,
-            self._stt,
-            self._bw,
+            put_k(buf["t"]),
+            put_k(buf["pool"]),
+            put_k(buf["bytes"]),
+            put_k(buf["weight"]),
+            put_k(buf["host"]),
+            put_k(buf["valid"]),
+            put_k(jnp.asarray(bw_window, self.dtype)),
+            put_k(scale_buf),
+            put_r(self._bits_table),
+            put_r(self._pool_lat),
+            put_r(self._local_lat),
+            put_r(self._route),
+            put_r(self._stt),
+            put_r(self._bw),
             stage_order=self._stage_order,
             n_windows=self.n_windows,
             n_hosts=H,

@@ -63,7 +63,7 @@ import numpy as np
 from .analyzer import DelayBreakdown, EpochAnalyzer, FineGrainedSimulator, analyze_any
 from .cache import DeviceCacheConfig, DeviceCacheModel
 from .coherency import CoherencyModel
-from .engine import AnalysisEngine, EngineClient, EngineHandle
+from .engine import AnalysisEngine, EngineClient, EngineHandle, fold_dispatch_stats
 from .events import MemEvents, RegionMap
 from .migration import MigrationSimulator
 from .policy import PlacementPolicy, capacity_check
@@ -93,6 +93,11 @@ class SimReport:
     cache_hit_fraction: float = float("nan")  # device-cache running hit rate
     dropped_batches: int = 0  # analysis batches lost to analyzer failures
     dropped_epochs: int = 0  # their epochs: totals exclude exactly these
+    # sharded-dispatch observability (maxima over this session's dispatches)
+    devices_used: int = 1  # devices the stacked dispatch sharded over
+    shard_rows: int = 0  # per-device rows of the padded leading axis (0=unsharded)
+    padded_waste: float = 0.0  # worst padding fraction of the leading axis
+    coalesced_group_size: int = 1  # sessions stacked into one dispatch
 
     @property
     def slowdown(self) -> float:
@@ -126,6 +131,10 @@ class SimReport:
             "cache_hit_fraction": self.cache_hit_fraction,
             "dropped_batches": self.dropped_batches,
             "dropped_epochs": self.dropped_epochs,
+            "devices_used": self.devices_used,
+            "shard_rows": self.shard_rows,
+            "padded_waste": self.padded_waste,
+            "coalesced_group_size": self.coalesced_group_size,
         }
 
 
@@ -318,6 +327,14 @@ class AttachedProgram(EngineClient):
             r.per_switch_bandwidth_ns += bd.per_switch_bandwidth_ns
             r.simulated_s += delay_ns * 1e-9
             r.analyzer_s += analyzer_s
+            if self._handle is not None:
+                fold_dispatch_stats(
+                    r, self._handle.last_dispatch, self._handle.last_group_size
+                )
+            else:
+                fold_dispatch_stats(
+                    r, getattr(self._analyzer, "last_dispatch", None), 1
+                )
         return delay_ns
 
     def _analyze_and_accumulate(

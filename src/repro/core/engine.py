@@ -59,7 +59,13 @@ import numpy as np
 from .analyzer import DelayBreakdown, EpochAnalyzer, analyze_any
 from .events import EventStager, MemEvents
 
-__all__ = ["AnalysisEngine", "EngineClient", "EngineHandle", "dispatch_key"]
+__all__ = [
+    "AnalysisEngine",
+    "EngineClient",
+    "EngineHandle",
+    "dispatch_key",
+    "fold_dispatch_stats",
+]
 
 
 def dispatch_key(analyzer) -> Optional[Tuple]:
@@ -87,6 +93,25 @@ def dispatch_key(analyzer) -> Optional[Tuple]:
         np.asarray(flat.switch_stt_ns).tobytes(),
         np.asarray(flat.switch_bandwidth_gbps).tobytes(),
     )
+
+
+def fold_dispatch_stats(report, stats, group_size: int) -> None:
+    """Fold one dispatch's sharding observability into a report.
+
+    ``report`` is any object with ``devices_used`` / ``shard_rows`` /
+    ``padded_waste`` / ``coalesced_group_size`` fields (SimReport,
+    FabricReport).  Device counts, shard widths and group sizes keep their
+    maxima (did sharding/coalescing ever engage, and how wide); padded
+    waste keeps the worst fraction seen.  Callers hold their report lock.
+    """
+    if stats is not None:
+        report.devices_used = max(report.devices_used, stats.devices_used)
+        report.shard_rows = max(report.shard_rows, stats.shard_rows)
+        report.padded_waste = max(report.padded_waste, stats.padded_fraction)
+    if group_size:
+        report.coalesced_group_size = max(
+            report.coalesced_group_size, int(group_size)
+        )
 
 
 @dataclasses.dataclass
@@ -123,6 +148,10 @@ class EngineHandle:
         self._closed = False
         self.dropped_batches = 0
         self.dropped_epochs = 0
+        # dispatch observability, written by the dispatcher thread before
+        # fold callbacks run (sessions copy these into their reports)
+        self.last_dispatch = None  # Optional[DispatchStats]
+        self.last_group_size = 0
 
     # -- session-facing API -------------------------------------------------- #
 
@@ -258,9 +287,18 @@ class AnalysisEngine:
     the module docstring.  ``coalesce=False`` disables cross-session
     stacking (every batch dispatches solo) — a debugging/bisection knob."""
 
-    def __init__(self, name: str = "cxlmemsim-engine", coalesce: bool = True):
+    def __init__(
+        self,
+        name: str = "cxlmemsim-engine",
+        coalesce: bool = True,
+        mesh=None,
+    ):
         self.name = name
         self.coalesce = bool(coalesce)
+        # a ('data',) mesh shards every coalesced dispatch's session axis
+        # across devices (repro.launch.mesh.make_data_mesh); None = the
+        # analyzer's own mesh (if any), i.e. single-device by default
+        self.mesh = mesh
         self._cv = threading.Condition(threading.Lock())
         self._pending: Deque[_Submission] = deque()
         self._thread: Optional[threading.Thread] = None
@@ -419,8 +457,20 @@ class AnalysisEngine:
                     [s.traces for s in live],
                     [s.scales for s in live],
                     stager=stager,
+                    mesh=self.mesh,
                 )
             elapsed = time.perf_counter() - t0
+            if live:
+                # written before the fold loop so fold callbacks (and any
+                # reader after the future resolves) see this dispatch's
+                # sharding stats on their own handle, even when a peer's
+                # analyzer ran the stacked dispatch
+                stats = getattr(
+                    live[0].handle.analyzer, "last_dispatch", None
+                )
+                for sub in live:
+                    sub.handle.last_dispatch = stats
+                    sub.handle.last_group_size = len(live)
             total_epochs = sum(len(s.traces) for s in live)
             with self._cv:
                 if live:

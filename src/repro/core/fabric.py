@@ -66,7 +66,7 @@ import jax
 import numpy as np
 
 from .analyzer import DelayBreakdown, EpochAnalyzer
-from .engine import AnalysisEngine, EngineClient, EngineHandle
+from .engine import AnalysisEngine, EngineClient, EngineHandle, fold_dispatch_stats
 from .cache import DeviceCacheConfig, DeviceCacheModel
 from .coherency import CoherencyConfig, CoherencyModel
 from .events import MemEvents, RegionMap, concat_events
@@ -144,6 +144,11 @@ class FabricReport:
     cache_hit_fraction: float = float("nan")
     dropped_batches: int = 0  # round analyses lost to analyzer failures
     dropped_epochs: int = 0  # their epochs: totals exclude exactly these
+    # sharded-dispatch observability (maxima over this session's dispatches)
+    devices_used: int = 1
+    shard_rows: int = 0
+    padded_waste: float = 0.0
+    coalesced_group_size: int = 1
     per_pool_latency_ns: Optional[np.ndarray] = None
     per_switch_congestion_ns: Optional[np.ndarray] = None
     per_switch_bandwidth_ns: Optional[np.ndarray] = None
@@ -168,6 +173,10 @@ class FabricReport:
             "cache_hit_fraction": self.cache_hit_fraction,
             "dropped_batches": self.dropped_batches,
             "dropped_epochs": self.dropped_epochs,
+            "devices_used": self.devices_used,
+            "shard_rows": self.shard_rows,
+            "padded_waste": self.padded_waste,
+            "coalesced_group_size": self.coalesced_group_size,
         }
         for hc in self.hosts:
             out[f"host{hc.host}_native_s"] = hc.native_s
@@ -496,6 +505,14 @@ class FabricSession(EngineClient):
             r.per_pool_latency_ns += bd.per_pool_latency_ns
             r.per_switch_congestion_ns += bd.per_switch_congestion_ns
             r.per_switch_bandwidth_ns += bd.per_switch_bandwidth_ns
+            if self._handle is not None:
+                fold_dispatch_stats(
+                    r, self._handle.last_dispatch, self._handle.last_group_size
+                )
+            else:
+                fold_dispatch_stats(
+                    r, getattr(self._analyzer, "last_dispatch", None), 1
+                )
             for h, hc in enumerate(r.hosts):
                 hc.latency_s += float(bd.per_host_latency_ns[h]) * 1e-9
                 hc.congestion_s += float(bd.per_host_congestion_ns[h]) * 1e-9

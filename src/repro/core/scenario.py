@@ -43,7 +43,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .analyzer import DelayBreakdown, _analyze_sweep_jax, bucket_pow2, plan_cascade
+from .analyzer import (
+    DelayBreakdown,
+    DispatchStats,
+    _analyze_sweep_jax,
+    bucket_pow2,
+    plan_cascade,
+)
 from .cache import DeviceCacheConfig, DeviceCacheModel
 from .policy import PlacementPolicy, RegionArrays, assign_batch, bytes_per_pool_batch
 from .events import RegionMap
@@ -91,6 +97,10 @@ class SweepResult:
     native_ns: float  # roofline-paced native step time (shared: one workload)
     feasible: np.ndarray  # [K] bool: every pool within capacity
     utilization: np.ndarray  # [K, P] bytes placed / capacity
+    # sharded-dispatch observability for THIS run's single dispatch
+    devices_used: int = 1  # devices the scenario axis sharded over
+    shard_rows: int = 0  # scenarios per device after padding (0 = unsharded)
+    padded_fraction: float = 0.0  # padded scenario rows / dispatched rows
 
     @property
     def k(self) -> int:
@@ -151,6 +161,9 @@ class SweepResult:
                 "total_ms": b.total_ns / 1e6,
                 "slowdown": float(slow[i]),
                 "feasible": bool(self.feasible[i]),
+                "devices_used": self.devices_used,
+                "shard_rows": self.shard_rows,
+                "padded_fraction": self.padded_fraction,
             }
             for i, (s, b) in enumerate(zip(self.scenarios, self.breakdowns))
         ]
@@ -184,8 +197,12 @@ class ScenarioSuite:
         bw_window_ns: float = 10_000.0,
         n_windows: int = 128,
         dtype=jnp.float32,
+        mesh=None,
     ):
         self.topology = topology
+        # a ('data',) mesh shards the scenario axis of every run() dispatch
+        # (repro.launch.mesh.make_data_mesh); overridable per run
+        self.mesh = mesh
         self.regions = regions
         self.phases = list(phases)
         self.hw = hw
@@ -224,6 +241,7 @@ class ScenarioSuite:
 
         self._sweep_fn = _counted
         self.last_unique_cascades = 0  # U of the latest run (dedup visibility)
+        self.last_dispatch = DispatchStats()  # sharding stats of latest run
 
     def compile_cache_size(self) -> int:
         """Compiled-graph count of the sweep kernel.  Process-global for
@@ -345,15 +363,32 @@ class ScenarioSuite:
     # the stacked dispatch
     # ------------------------------------------------------------------ #
 
-    def run(self, scenarios: Sequence[Scenario], on_overflow: str = "mark") -> SweepResult:
+    def run(
+        self,
+        scenarios: Sequence[Scenario],
+        on_overflow: str = "mark",
+        mesh=None,
+    ) -> SweepResult:
         """Evaluate every scenario in ONE jitted, stacked device dispatch.
 
         ``on_overflow``: ``'mark'`` records capacity violations in
         ``SweepResult.feasible`` (the frontier API filters on it);
         ``'raise'`` fails fast like :func:`~repro.core.policy.capacity_check`.
+
+        ``mesh`` (defaulting to the suite's) shards the scenario axis over
+        the mesh's 'data' devices: K is padded (scenario 0 repeated) to a
+        multiple of the device count so shards stay uniform, the K-leading
+        arrays are placed pre-sharded, and the skeleton stacks plus the U
+        unique cascades replicate — every device runs the (deduped) phase-1
+        cascades, then reduces only its own scenario slice, so the host
+        transfer stays one ``[K, ...]`` vector.  Padded rows are dropped
+        before results are built.  Unsharded runs are bitwise unchanged.
         """
         if on_overflow not in ("mark", "raise"):
             raise ValueError(on_overflow)
+        from repro.distributed.sharding import (
+            pad_to_multiple, replicated, resolve_data_mesh, shard_rows,
+        )
         scenarios = list(scenarios)
         if not scenarios:
             raise ValueError("empty scenario list")
@@ -463,28 +498,52 @@ class ScenarioSuite:
                 scale_cache[sk] = rows
             lat_scale[k] = rows
 
-        # 5. ONE stacked dispatch; per-scenario totals come back together
+        # 5. ONE stacked dispatch; per-scenario totals come back together.
+        # With a mesh, the scenario axis is padded to a device multiple
+        # (repeating scenario 0 — its cascade/group indices stay valid) and
+        # sharded over 'data'; everything per-cascade or structural
+        # replicates.
+        mesh, n_shards = resolve_data_mesh(
+            mesh if mesh is not None else self.mesh, K, what="scenario sweep"
+        )
+        Kp = pad_to_multiple(K, n_shards)
+
+        def pad_k(a: np.ndarray) -> np.ndarray:
+            if Kp == a.shape[0]:
+                return a
+            return np.concatenate(
+                [a, np.repeat(a[:1], Kp - a.shape[0], axis=0)], axis=0
+            )
+
+        put_k = lambda a: shard_rows(mesh, jnp.asarray(pad_k(np.asarray(a))))
+        put_r = lambda a: replicated(mesh, a)
+        self.last_dispatch = DispatchStats(
+            devices_used=n_shards,
+            shard_rows=Kp // n_shards if mesh is not None else 0,
+            rows=K,
+            padded_fraction=float(Kp - K) / Kp,
+        )
         fd = self.dtype
         out = self._sweep_fn(
-            jnp.asarray(stack_np("t")),
-            jnp.asarray(stack_np("bytes")),
-            jnp.asarray(stack_np("weight")),
-            jnp.asarray(stack_np("host")),
-            jnp.asarray(stack_np("valid")),
-            jnp.asarray(stack_np("region")),
-            jnp.asarray(bw_window, fd),
-            jnp.asarray(cas_group),
-            jnp.asarray(cas_assign),
-            jnp.asarray(cas_stt),
-            jnp.asarray(group_of),
-            jnp.asarray(cascade_of),
-            jnp.asarray(assign),
-            jnp.asarray(lat_scale),
-            jnp.asarray(topo_stack.pool_latency_ns, fd),
-            jnp.asarray(topo_stack.local_latency_ns, fd),
-            jnp.asarray(topo_stack.switch_bandwidth_gbps, fd),
-            self._bits_table,
-            self._route,
+            put_r(jnp.asarray(stack_np("t"))),
+            put_r(jnp.asarray(stack_np("bytes"))),
+            put_r(jnp.asarray(stack_np("weight"))),
+            put_r(jnp.asarray(stack_np("host"))),
+            put_r(jnp.asarray(stack_np("valid"))),
+            put_r(jnp.asarray(stack_np("region"))),
+            put_r(jnp.asarray(bw_window, fd)),
+            put_r(jnp.asarray(cas_group)),
+            put_r(jnp.asarray(cas_assign)),
+            put_r(jnp.asarray(cas_stt)),
+            put_k(group_of),
+            put_k(cascade_of),
+            put_k(assign),
+            put_k(lat_scale),
+            put_k(np.asarray(topo_stack.pool_latency_ns, self._np_dtype)),
+            put_k(np.asarray(topo_stack.local_latency_ns, self._np_dtype)),
+            put_k(np.asarray(topo_stack.switch_bandwidth_gbps, self._np_dtype)),
+            put_r(self._bits_table),
+            put_r(self._route),
             stage_order=self._stage_order,
             n_windows=self.n_windows,
             n_hosts=H,
@@ -510,6 +569,9 @@ class ScenarioSuite:
             native_ns=native,
             feasible=feasible,
             utilization=utilization,
+            devices_used=self.last_dispatch.devices_used,
+            shard_rows=self.last_dispatch.shard_rows,
+            padded_fraction=self.last_dispatch.padded_fraction,
         )
 
     # ------------------------------------------------------------------ #

@@ -18,6 +18,7 @@ divisible, else the expert hidden dim.
 
 from __future__ import annotations
 
+import warnings
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -31,7 +32,87 @@ __all__ = [
     "input_pspecs",
     "named",
     "tree_named",
+    "resolve_data_mesh",
+    "pad_to_multiple",
+    "shard_rows",
+    "replicated",
 ]
+
+
+# --------------------------------------------------------------------------- #
+# Leading-axis ("data") dispatch sharding — used by the analyzer's stacked
+# [K, B, N] dispatches (ScenarioSuite sweeps, AnalysisEngine coalescing,
+# FleetSim racks).  The contract: the K leading axis shards over the mesh's
+# 'data' axis; everything else (topology structure, skeleton stacks, unique
+# cascades) replicates.
+# --------------------------------------------------------------------------- #
+
+
+def resolve_data_mesh(mesh: Optional[Mesh], rows: int, *, what: str = "dispatch"):
+    """Validate ``mesh`` for sharding ``rows`` leading-axis rows.
+
+    Returns ``(mesh, n_shards)``.  ``(None, 1)`` means sharding does not
+    engage (no mesh, a single device, or nothing to shard).  When the mesh
+    holds more devices along 'data' than there are rows, we fall back to a
+    submesh over the first ``rows`` devices with a warning instead of letting
+    XLA die on a shape-divisibility error — the work still runs, just on
+    fewer shards.
+    """
+    if mesh is None or rows <= 0:
+        return None, 1
+    if "data" not in mesh.axis_names:
+        raise ValueError(
+            f"sharded {what} needs a mesh with a 'data' axis; got axes "
+            f"{tuple(mesh.axis_names)} — build one with "
+            "repro.launch.mesh.make_data_mesh()"
+        )
+    n = int(mesh.shape["data"])
+    for ax in mesh.axis_names:
+        if ax != "data" and int(mesh.shape[ax]) != 1:
+            raise ValueError(
+                f"sharded {what} shards only the 'data' axis; mesh axis "
+                f"{ax!r} has size {mesh.shape[ax]} > 1 (leading-axis rows "
+                "cannot also shard over it)"
+            )
+    if n <= 1:
+        return None, 1
+    if n > rows:
+        warnings.warn(
+            f"mesh has {n} devices on 'data' but the {what} has only "
+            f"{rows} rows; falling back to {rows} shard(s)",
+            stacklevel=3,
+        )
+        devs = np.asarray(mesh.devices).reshape(-1)[:rows]
+        sub = Mesh(devs, ("data",))
+        return (None, 1) if rows == 1 else (sub, rows)
+    return mesh, n
+
+
+def pad_to_multiple(n: int, k: int) -> int:
+    """Smallest multiple of ``k`` that is >= ``n`` (k <= 1 => n)."""
+    if k <= 1:
+        return n
+    return ((n + k - 1) // k) * k
+
+
+def shard_rows(mesh: Optional[Mesh], x):
+    """Device_put ``x`` with its leading axis sharded over 'data'.
+
+    No-op passthrough when ``mesh`` is None so callers can write one code
+    path; the leading dim must be a multiple of the data-axis size (callers
+    pad with :func:`pad_to_multiple` first).
+    """
+    if mesh is None:
+        return x
+    spec = P(*(("data",) + (None,) * (np.ndim(x) - 1)))
+    return jax.device_put(x, NamedSharding(mesh, spec))
+
+
+def replicated(mesh: Optional[Mesh], x):
+    """Device_put ``x`` fully replicated over ``mesh`` (passthrough if None)."""
+    if mesh is None:
+        return x
+    return jax.device_put(x, NamedSharding(mesh, P()))
 
 
 def batch_axes(mesh: Mesh) -> Tuple[str, ...]:

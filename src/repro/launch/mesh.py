@@ -6,7 +6,12 @@ from typing import Sequence, Tuple
 
 import jax
 
-__all__ = ["make_abstract_mesh", "make_production_mesh", "make_local_mesh"]
+__all__ = [
+    "make_abstract_mesh",
+    "make_production_mesh",
+    "make_local_mesh",
+    "make_data_mesh",
+]
 
 
 def make_abstract_mesh(shape: Sequence[int], axes: Sequence[str]):
@@ -45,3 +50,20 @@ def make_local_mesh(data: int = 1, model: int = 1):
     data = min(data, n)
     model = max(min(model, n // data), 1)
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_data_mesh(n: int | None = None):
+    """1-D ``('data',)`` mesh over the first ``n`` (default: all) devices.
+
+    The mesh shape the analyzer's sharded dispatch expects: stacked
+    ``[K, B, N]`` dispatches shard their leading scenario/session/rack axis
+    over 'data' (see ``repro.distributed.sharding.resolve_data_mesh``).
+    Built with ``jax.sharding.Mesh`` directly so a subset of devices works
+    on every supported JAX version.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    n = len(devs) if n is None else max(1, min(int(n), len(devs)))
+    return Mesh(np.array(devs[:n]), ("data",))

@@ -1,8 +1,16 @@
 import os
 
-# Tests must see the single real CPU device — never the 512-device dry-run
-# configuration (the brief forbids setting that flag globally).
+# Tests run on CPU with 8 *virtual* devices: the sharded-dispatch tests
+# (test_fleet_sharding.py) need a multi-device ('data',) mesh, and the full
+# suite is verified to pass unchanged under this flag.  It must be set
+# before jax initializes its backends — hence here, at conftest import time
+# — and is appended so an externally supplied XLA_FLAGS still applies.
+# (The 512-device dry-run configuration stays subprocess-only; see
+# test_system.py.)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+_FLAG = "--xla_force_host_platform_device_count=8"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()
 
 import numpy as np
 import pytest
@@ -11,3 +19,12 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def data_mesh():
+    """A ('data',) mesh over every (virtual) device — the sharded-dispatch
+    mesh the analyzer/suite/fleet `mesh=` options expect."""
+    from repro.launch.mesh import make_data_mesh
+
+    return make_data_mesh()

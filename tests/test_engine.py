@@ -446,6 +446,7 @@ def test_sim_report_summary_keys_locked():
         "injected_sleep_s", "analyzer_s", "overhead",
         "migration_moved_bytes", "cache_hit_fraction",
         "dropped_batches", "dropped_epochs",
+        "devices_used", "shard_rows", "padded_waste", "coalesced_group_size",
     }
 
 
@@ -456,6 +457,7 @@ def test_fabric_report_summary_keys_locked():
         "coherency_s", "bi_messages", "analyzer_s",
         "migration_moved_bytes", "cache_hit_fraction",
         "dropped_batches", "dropped_epochs",
+        "devices_used", "shard_rows", "padded_waste", "coalesced_group_size",
     }
     per_host = {
         f"host{h}_{k}" for h in (0, 1)

@@ -87,12 +87,12 @@ def test_claim3_epoch_matches_event_by_event():
 
 def test_dryrun_compiles_on_a_small_production_mesh():
     """End-to-end dry-run proof at reduced scale: 8 virtual devices (2 data x
-    4 model), one arch x one shape, in a subprocess so XLA_FLAGS stays local
-    (the brief forbids setting the 512-device flag globally)."""
+    4 model), one arch x one shape, in a subprocess so nothing leaks into
+    this process's already-initialized jax.  The 8-device XLA flag itself is
+    inherited from conftest's environment."""
     code = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import dataclasses, jax
+assert jax.device_count() == 8, jax.devices()
 import repro.configs as cfgs
 from repro.launch.dryrun import run_cell
 mesh = jax.make_mesh((2, 4), ("data", "model"))
