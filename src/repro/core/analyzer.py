@@ -68,24 +68,29 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .aot import AotDispatchCache
 from .events import EventStager, MemEvents
 from .topology import FlatTopology
 
 __all__ = [
+    "ChainPlan",
     "DelayBreakdown",
     "DispatchStats",
     "EpochAnalyzer",
     "FineGrainedSimulator",
+    "PendingBatch",
     "analyze_any",
     "analyze_ref",
     "bucket_pow2",
     "plan_cascade",
+    "plan_chain",
     "serial_queue_ref",
 ]
 
@@ -98,12 +103,29 @@ class DispatchStats:
     is the per-device slice of the (padded) leading axis, 0 when unsharded;
     ``padded_fraction`` is the fraction of leading-axis rows that were
     bucket/alignment padding — wasted compute the caller can act on.
+
+    The pipeline breakdown splits the dispatch wall clock: ``stage_s``
+    host staging (pack/fill, zero argsort on the pipeline path),
+    ``transfer_s`` H2D placement, ``compile_s`` AOT lowering (nonzero only
+    on a cache miss — steady state is 0), ``compute_s`` time spent blocked
+    on device execution (under the engine's overlapped dispatcher this is
+    only the *exposed* compute, the part H2D/staging of the next batch
+    could not hide).  ``donated`` records whether the dispatch reused the
+    staged device buffers in place; ``aot_cache_hit`` whether it ran a
+    pre-compiled executable.  Non-pipeline dispatches leave all six at
+    their defaults.
     """
 
     devices_used: int = 1
     shard_rows: int = 0
     rows: int = 0
     padded_fraction: float = 0.0
+    stage_s: float = 0.0
+    transfer_s: float = 0.0
+    compile_s: float = 0.0
+    compute_s: float = 0.0
+    donated: bool = False
+    aot_cache_hit: bool = False
 
 
 def _opt_add(a: Optional[np.ndarray], b: Optional[np.ndarray]) -> Optional[np.ndarray]:
@@ -247,6 +269,7 @@ def analyze_ref(
     bw_window_ns: float = 10_000.0,
     lat_scale: Optional[np.ndarray] = None,
     n_windows: Optional[int] = None,
+    presorted: bool = False,
 ) -> DelayBreakdown:
     """Vectorized numpy implementation of the three-delay model (oracle).
 
@@ -270,6 +293,12 @@ def analyze_ref(
     float tolerance instead of window-discretization tolerance.  Default
     (None) keeps the historical behavior: enough windows to cover the
     shifted span.
+
+    ``presorted=True`` promises ``events.t_ns`` is already non-decreasing
+    (:func:`~repro.core.events.merge_host_traces` output, staged epochs),
+    letting the first cascade stage skip its stable argsort — the
+    permutation would be the identity.  Later stages re-sort only after a
+    stage actually rewrote times.
     """
     P, S, H = flat.n_pools, flat.n_switches, flat.n_hosts
     if events.n == 0:
@@ -295,17 +324,22 @@ def analyze_ref(
     # -- 2. congestion delay (cascaded serial queues, deepest switch first) - #
     per_switch_cong = np.zeros((S,), np.float64)
     per_host_cong = np.zeros((H,), np.float64)
+    sorted_now = bool(presorted)
     for s in flat.stage_order():
         stt = float(flat.switch_stt_ns[s])
         mask = flat.route[vp, s] > 0
         if stt <= 0 or not mask.any():
             continue
-        order = np.argsort(t, kind="stable")
-        m_sorted = mask[order]
-        sub = order[m_sorted]
+        if sorted_now:
+            sub = np.nonzero(mask)[0]
+        else:
+            order = np.argsort(t, kind="stable")
+            m_sorted = mask[order]
+            sub = order[m_sorted]
         start = serial_queue_ref(t[sub], stt)
         delay = start - t[sub]
         t[sub] = start
+        sorted_now = False  # this stage rewrote times
         per_switch_cong[s] = delay.sum()
         per_host_cong += np.bincount(host[sub], weights=delay, minlength=H)[:H]
     congestion_ns = float(per_switch_cong.sum())
@@ -442,6 +476,143 @@ def plan_cascade(flat: FlatTopology):
             if p < P:
                 bits_pool[p] |= np.int32(1) << k
     return bits_pool, merge_plan, stage_order
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainPlan:
+    """Static routing data for the device-resident pipeline dispatch.
+
+    ``enter_stage[v]`` is the cascade stage position at which events of
+    virtual pool ``v`` first enter the fabric (-1 = local, never routed).
+    Valid only for *chain* topologies: single host, and every stage mask a
+    subset of the next in stage order (deepest-first) — then an event
+    entering at position ``p`` traverses exactly stages ``p..S-1``, which
+    is what lets :func:`repro.kernels.ref.chain_cascade` process a compact
+    growing suffix instead of the full padded plane.
+    """
+
+    enter_stage: np.ndarray  # [V] int32
+    stage_order: Tuple[int, ...]
+
+
+def plan_chain(flat: FlatTopology) -> Optional[ChainPlan]:
+    """Chain-eligibility check; None when the compact cascade cannot apply.
+
+    Eligible: ``n_hosts == 1`` and nested stage masks (``M_p ⊆ M_{p+1}``
+    in stage order).  Every linear expander chain — the paper's Figure 1
+    shape, two-tier trees with one leaf switch per level on the path, and
+    the deep ``chained_topology`` — qualifies; sibling switches at the
+    same depth (disjoint masks) do not, and those dispatches fall back to
+    the AOT-compiled full-plane path.
+    """
+    if flat.n_hosts != 1:
+        return None
+    route = np.asarray(flat.route)
+    stage_order = tuple(int(s) for s in flat.stage_order())
+    masks = [route[:, s] > 0 for s in stage_order]
+    for p in range(len(masks) - 1):
+        if np.any(masks[p] & ~masks[p + 1]):
+            return None
+    enter = np.full((route.shape[0],), -1, np.int32)
+    for p in range(len(masks) - 1, -1, -1):
+        enter[masks[p]] = p
+    return ChainPlan(enter_stage=enter, stage_order=stage_order)
+
+
+def _analyze_pipeline_jax(
+    t_pack: jnp.ndarray,  # [B, W] f32 per-stage packed sorted runs (+inf pads) — DONATED
+    idx_pack: jnp.ndarray,  # [B, W] i32 positions into the staged row (-1 pads) — DONATED
+    pool: jnp.ndarray,  # [B, N] i32 full plane (staged row order)
+    nbytes: jnp.ndarray,  # [B, N] f32
+    weight: jnp.ndarray,  # [B, N] f32
+    valid: jnp.ndarray,  # [B, N] bool
+    bw_window_ns: jnp.ndarray,  # [B]
+    lat_scale: jnp.ndarray,  # [B, V]
+    pool_latency_ns: jnp.ndarray,  # [V]
+    local_latency_ns: jnp.ndarray,  # []
+    route: jnp.ndarray,  # [V, S]
+    switch_stt_ns: jnp.ndarray,  # [S]
+    switch_bw: jnp.ndarray,  # [S]
+    stage_order: Tuple[int, ...],  # static
+    seg_caps: Tuple[int, ...],  # static packed segment capacities
+    n_windows: int,  # static
+):
+    """Device-resident single-host chain dispatch (the pipeline hot path).
+
+    The merge of per-stage sorted runs into one fabric timeline and every
+    serial-queue scan happen **inside this graph**
+    (:func:`repro.kernels.ref.chain_cascade` over a compact suffix that
+    only ever holds routed events), so staging performed zero host
+    argsorts.  Bandwidth windows come straight off the compact array:
+    local-DRAM route rows are all zero, so unrouted events could only ever
+    contribute zero bytes to every switch — skipping them is exact, and
+    ``W`` (sum of per-stage capacity buckets) is typically much smaller
+    than padded ``N``.  Latency stays a full-plane gather (it needs no
+    times).  Returns the nine breakdown leaves of :func:`_analyze_jax`
+    plus ``(t_fin, idx_fin)`` — shaped/typed exactly like the two donated
+    inputs, so XLA serves them from the donated buffers and steady-state
+    dispatch allocates nothing on device.
+    """
+    V = pool_latency_ns.shape[0]
+    S = switch_stt_ns.shape[0]
+    f32 = t_pack.dtype
+    stage_arr = jnp.asarray(stage_order, jnp.int32)
+    stts = switch_stt_ns[stage_arr]
+
+    def one(tp1, ip1, pool1, nbytes1, weight1, valid1, bww1, scale1):
+        # latency: identical to the fused full-plane formulation
+        per_event_lat = (
+            jnp.maximum(pool_latency_ns[pool1] - local_latency_ns, 0.0)
+            * scale1[pool1]
+            * weight1
+        )
+        per_event_lat = jnp.where(valid1, per_event_lat, 0.0)
+        pool_onehot = (
+            pool1[:, None] == jnp.arange(V, dtype=pool1.dtype)
+        ).astype(f32)
+        per_pool_lat = jnp.einsum("n,np->p", per_event_lat, pool_onehot)
+        latency = per_event_lat.sum()
+
+        # congestion: compact suffix cascade (merge + scan fused)
+        from repro.kernels import ops as kops  # deferred: avoid cycles
+
+        t_fin, idx_fin, dsums = kops.chain_cascade(tp1, ip1, stts, seg_caps)
+        per_switch_cong = jnp.zeros((S,), f32).at[stage_arr].set(dsums)
+        congestion = per_switch_cong.sum()
+
+        # bandwidth from the compact array: payloads gathered through the
+        # staged-row positions the cascade carried along
+        real = idx_fin >= 0
+        safe = jnp.maximum(idx_fin, 0)
+        lat_e = jnp.take(per_event_lat, safe)
+        vp_e = jnp.take(pool1, safe)
+        nbytes_e = jnp.take(nbytes1, safe)
+        t_obs = jnp.where(real, t_fin + lat_e, 0.0)
+        win = jnp.minimum((t_obs / bww1).astype(jnp.int32), n_windows - 1)
+        win = jnp.where(real, win, n_windows - 1)
+        key = win * V + vp_e
+        wp = jax.ops.segment_sum(
+            jnp.where(real, nbytes_e, 0.0), key, num_segments=n_windows * V
+        ).reshape(n_windows, V)
+        wbytes = wp @ route  # [n_windows, S]
+        bw_safe = jnp.where(switch_bw > 0, switch_bw, 1.0)
+        stretch = jnp.maximum(wbytes / bw_safe[None, :] - bww1, 0.0)
+        stretch = jnp.where(switch_bw[None, :] > 0, stretch, 0.0)
+        per_switch_bw_d = stretch.sum(axis=0)
+        bandwidth = per_switch_bw_d.sum()
+
+        return (
+            latency, congestion, bandwidth,
+            per_pool_lat, per_switch_cong, per_switch_bw_d,
+            latency[None], congestion[None], bandwidth[None],
+            t_fin, idx_fin,
+        )
+
+    outs = jax.vmap(one)(
+        t_pack, idx_pack, pool, nbytes, weight, valid, bw_window_ns, lat_scale
+    )
+    summed = tuple(x.sum(axis=0) for x in outs[:9])
+    return summed + (outs[9], outs[10])
 
 
 def _analyze_jax(
@@ -950,6 +1121,53 @@ def _analyze_sweep_jax(
     )
 
 
+@dataclasses.dataclass
+class PendingBatch:
+    """An in-flight epoch dispatch: staged, transferred and launched, but
+    not yet resolved.  :meth:`finish` blocks on the device result and
+    returns the :class:`DelayBreakdown`; until then the caller is free to
+    stage and launch the *next* batch — the engine's overlapped dispatcher
+    does exactly that, so batch k+1's staging and H2D run while batch k
+    computes.  ``stats.compute_s`` is finalized at finish time with the
+    exposed device wait."""
+
+    analyzer: "EpochAnalyzer"
+    out: Optional[tuple]
+    stats: DispatchStats
+
+    def finish(self) -> DelayBreakdown:
+        a = self.analyzer
+        P, S, H = a.flat.n_pools, a.flat.n_switches, a.flat.n_hosts
+        if self.out is None:
+            a.last_dispatch = self.stats
+            return DelayBreakdown.zero(P, S, H)
+        t0 = time.perf_counter()
+        # the single host-boundary crossing for the whole batch; the
+        # pipeline dispatch's trailing (t_fin, idx_pack) leaves stay on
+        # device and are simply dropped
+        lat, cong, bw, ppl, psc, psb, phl, phc, phb = jax.device_get(
+            self.out[:9]
+        )
+        stats = dataclasses.replace(
+            self.stats,
+            compute_s=self.stats.compute_s + (time.perf_counter() - t0),
+        )
+        a.last_dispatch = stats
+        self.stats = stats
+        self.out = None
+        return DelayBreakdown(
+            float(lat),
+            float(cong),
+            float(bw),
+            ppl.astype(np.float64),
+            psc.astype(np.float64),
+            psb.astype(np.float64),
+            phl.astype(np.float64),
+            phc.astype(np.float64),
+            phb.astype(np.float64),
+        )
+
+
 class EpochAnalyzer:
     """Jitted epoch analyzer with bucketed padding and epoch batching.
 
@@ -973,7 +1191,16 @@ class EpochAnalyzer:
         impl: str = "inline",
         fused: bool = True,
         mesh=None,
+        pipeline: bool = False,
+        aot: Optional[AotDispatchCache] = None,
     ):
+        """``pipeline=True`` enables the device-resident dispatch path:
+        chain-eligible topologies (:func:`plan_chain`) run the packed
+        compact cascade with on-device sorting and donated staging
+        buffers; everything else runs the standard full-plane graph, but
+        still through the AOT executable cache (``aot``, private by
+        default) with the stage/transfer/compile/compute breakdown in
+        :attr:`last_dispatch`.  Requires ``impl='inline'``."""
         self.flat = flat
         self.mesh = mesh
         self.last_dispatch = DispatchStats()
@@ -1006,6 +1233,17 @@ class EpochAnalyzer:
         )
         self._batch_fn = jax.jit(_analyze_batch_jax, static_argnames=_static)
         self._multi_fn = jax.jit(_analyze_multi_jax, static_argnames=_static)
+        self.pipeline = bool(pipeline)
+        self._chain_plan: Optional[ChainPlan] = None
+        self._aot: Optional[AotDispatchCache] = None
+        if self.pipeline:
+            if impl != "inline":
+                raise ValueError(
+                    "pipeline=True requires impl='inline' — the device-"
+                    "resident dispatch is a pure-XLA graph"
+                )
+            self._aot = aot if aot is not None else AotDispatchCache()
+            self._chain_plan = plan_chain(flat)
 
     _bucket = staticmethod(bucket_pow2)
 
@@ -1034,6 +1272,186 @@ class EpochAnalyzer:
             _check_reachable(self.flat, tr)
         return pairs
 
+    def _aot_build(self, chain: Optional[ChainPlan], caps, b_bucket, n_bucket, dev_args):
+        """(cache key, build thunk) for this dispatch's AOT executable.
+
+        The key carries what varies *within* one analyzer: the dispatch
+        kind and the bucketed shapes (chain-path segment capacities
+        included — they are static operands of the compact cascade).  The
+        topology fingerprint and mesh are fixed per analyzer and its
+        private cache, so they need no key bits here; the engine's
+        ``dispatch_key`` separates analyzers."""
+        sds = tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in dev_args)
+        topo = (self._pool_lat, self._local_lat, self._route, self._stt, self._bw)
+        topo_s = tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in topo)
+        if chain is not None:
+            key = ("chain", b_bucket, n_bucket, caps)
+
+            def build():
+                jitted = jax.jit(
+                    _analyze_pipeline_jax,
+                    static_argnames=("stage_order", "seg_caps", "n_windows"),
+                    donate_argnums=(0, 1),
+                )
+                return jitted.lower(
+                    *sds, *topo_s,
+                    stage_order=chain.stage_order,
+                    seg_caps=caps,
+                    n_windows=self.n_windows,
+                ).compile()
+
+        else:
+            bits_s = jax.ShapeDtypeStruct(
+                self._bits_table.shape, self._bits_table.dtype
+            )
+            key = ("batch", b_bucket, n_bucket)
+
+            def build():
+                jitted = jax.jit(
+                    _analyze_batch_jax,
+                    static_argnames=(
+                        "stage_order", "n_windows", "n_hosts", "impl",
+                        "fused", "merge_plan",
+                    ),
+                )
+                return jitted.lower(
+                    *sds, bits_s, *topo_s,
+                    stage_order=self._stage_order,
+                    n_windows=self.n_windows,
+                    n_hosts=self.flat.n_hosts,
+                    impl=self.impl,
+                    fused=self.fused,
+                    merge_plan=self._merge_plan,
+                ).compile()
+
+        return key, build
+
+    def launch_batch(
+        self,
+        traces: Sequence[MemEvents],
+        lat_scales: Optional[Sequence[Optional[np.ndarray]]] = None,
+        stager: Optional[EventStager] = None,
+    ) -> PendingBatch:
+        """Stage, transfer and launch one epoch batch without blocking.
+
+        The non-blocking half of :meth:`analyze_batch` (same arguments,
+        same semantics once the returned :class:`PendingBatch` is
+        finished).  Pipeline analyzers on chain-eligible topologies run
+        the device-resident packed dispatch — on-device sort, donated
+        staging buffers, AOT executable; other pipeline dispatches run
+        the full-plane graph through the AOT cache; non-pipeline
+        analyzers launch the classic jitted path.  All three record the
+        stage/transfer/compile/compute split in the pending stats.
+        """
+        P, S = self.flat.n_pools, self.flat.n_switches
+        H = self.flat.n_hosts
+        pairs = self._clean_pairs(traces, lat_scales)
+        if not pairs:
+            return PendingBatch(self, None, DispatchStats(rows=0))
+        traces = [tr for tr, _ in pairs]
+        t0 = time.perf_counter()
+        n_bucket = self._bucket(max(tr.n for tr in traces))
+        b_bucket = self._bucket(len(traces), floor=1)
+        st = stager if stager is not None else self._stager
+        chain = self._chain_plan
+        caps = None
+        if chain is not None:
+            buf, pack, caps = st.stage_packed(
+                traces, b_bucket, n_bucket, chain.enter_stage,
+                len(chain.stage_order),
+            )
+        else:
+            buf = st.stage(traces, b_bucket, n_bucket)
+            pack = None
+        np_dtype = np.dtype(jnp.dtype(self.dtype).name)
+        scale_buf = np.ones((b_bucket, H * P), np_dtype)
+        for row, (_, sc) in enumerate(pairs):
+            if sc is not None:
+                scale_buf[row] = sc
+        span = np.maximum(buf["span"], self.bw_window_ns)
+        bw_window = np.maximum(span / self.n_windows, 1.0).astype(np_dtype)
+        t1 = time.perf_counter()
+
+        from repro.distributed.sharding import timed_device_put
+
+        if chain is not None:
+            host_args = (
+                pack["t"], pack["idx"], buf["pool"], buf["bytes"],
+                buf["weight"], buf["valid"], bw_window, scale_buf,
+            )
+        else:
+            host_args = (
+                buf["t"], buf["pool"], buf["bytes"], buf["weight"],
+                buf["host"], buf["valid"], bw_window, scale_buf,
+            )
+        dev_args, transfer_s = timed_device_put(list(host_args))
+
+        compile_s = 0.0
+        aot_hit = False
+        donated = False
+        if self.pipeline:
+            key, build = self._aot_build(chain, caps, b_bucket, n_bucket, dev_args)
+            c0 = time.perf_counter()
+            exe, aot_hit = self._aot.get(key, build)
+            if not aot_hit:
+                compile_s = time.perf_counter() - c0
+            t2 = time.perf_counter()
+            if chain is not None:
+                out = exe(
+                    *dev_args, self._pool_lat, self._local_lat, self._route,
+                    self._stt, self._bw,
+                )
+                donated = bool(dev_args[0].is_deleted())
+            else:
+                out = exe(
+                    *dev_args, self._bits_table, self._pool_lat,
+                    self._local_lat, self._route, self._stt, self._bw,
+                )
+        else:
+            t2 = time.perf_counter()
+            out = self._batch_fn(
+                *dev_args, self._bits_table, self._pool_lat, self._local_lat,
+                self._route, self._stt, self._bw,
+                stage_order=self._stage_order,
+                n_windows=self.n_windows,
+                n_hosts=H,
+                impl=self.impl,
+                fused=self.fused,
+                merge_plan=self._merge_plan,
+            )
+        dispatch_s = time.perf_counter() - t2
+        stats = DispatchStats(
+            devices_used=1,
+            shard_rows=0,
+            rows=len(traces),
+            padded_fraction=float(b_bucket - len(traces)) / b_bucket,
+            stage_s=t1 - t0,
+            transfer_s=transfer_s,
+            compile_s=compile_s,
+            compute_s=dispatch_s,
+            donated=donated,
+            aot_cache_hit=aot_hit,
+        )
+        self.last_dispatch = stats
+        return PendingBatch(self, tuple(out), stats)
+
+    def warmup(
+        self,
+        traces: Sequence[MemEvents],
+        lat_scales: Optional[Sequence[Optional[np.ndarray]]] = None,
+    ) -> bool:
+        """Populate the AOT cache for the executable this batch shape would
+        dispatch (one throwaway dispatch), so the first *real* dispatch of
+        a serving loop finds it compiled.  Returns True if a lowering
+        actually happened (False: already warm, empty batch, or a
+        non-pipeline analyzer — the jit path warms itself on first call).
+        """
+        if not self.pipeline:
+            return False
+        before = self._aot.lowerings
+        self.launch_batch(traces, lat_scales).finish()
+        return self._aot.lowerings > before
+
     def analyze_batch(
         self,
         traces: Sequence[MemEvents],
@@ -1051,6 +1469,10 @@ class EpochAnalyzer:
         so its dispatcher thread never shares mutable buffers with callers
         analyzing synchronously on this analyzer.
         """
+        if self.pipeline:
+            # the synchronous special case of the overlapped pipeline:
+            # launch, then immediately block
+            return self.launch_batch(traces, lat_scales, stager=stager).finish()
         P, S = self.flat.n_pools, self.flat.n_switches
         H = self.flat.n_hosts
         pairs = self._clean_pairs(traces, lat_scales)
@@ -1303,14 +1725,19 @@ class FineGrainedSimulator:
             self._paths.append([s for s in order if flat.route[v, s] > 0])
 
     def simulate(
-        self, events: MemEvents, lat_scale: Optional[np.ndarray] = None
+        self,
+        events: MemEvents,
+        lat_scale: Optional[np.ndarray] = None,
+        presorted: bool = False,
     ) -> DelayBreakdown:
         flat = self.flat
         P, S, H = flat.n_pools, flat.n_switches, flat.n_hosts
         if events.n == 0:
             return DelayBreakdown.zero(P, S, H)
         _check_reachable(flat, events)
-        ev = events.sorted_by_time()
+        # presorted: the caller promises a non-decreasing timeline (e.g.
+        # merge_host_traces output), skipping even the monotone check
+        ev = events if presorted else events.sorted_by_time()
         pool = ev.pool.astype(np.int64)
         hostv = ev.host.astype(np.int64)
         vpool = hostv * P + pool

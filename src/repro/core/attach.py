@@ -98,6 +98,13 @@ class SimReport:
     shard_rows: int = 0  # per-device rows of the padded leading axis (0=unsharded)
     padded_waste: float = 0.0  # worst padding fraction of the leading axis
     coalesced_group_size: int = 1  # sessions stacked into one dispatch
+    # pipeline-phase timing (sums over this session's dispatches)
+    stage_s: float = 0.0  # host staging-plane pack time
+    transfer_s: float = 0.0  # explicit H2D device_put time
+    compile_s: float = 0.0  # AOT lowering time (first dispatch per shape only)
+    compute_s: float = 0.0  # exposed device compute (post-overlap)
+    donated_dispatches: int = 0  # dispatches whose input planes were donated
+    aot_cache_hits: int = 0  # dispatches served from the AOT executable cache
 
     @property
     def slowdown(self) -> float:
@@ -135,6 +142,12 @@ class SimReport:
             "shard_rows": self.shard_rows,
             "padded_waste": self.padded_waste,
             "coalesced_group_size": self.coalesced_group_size,
+            "stage_s": self.stage_s,
+            "transfer_s": self.transfer_s,
+            "compile_s": self.compile_s,
+            "compute_s": self.compute_s,
+            "donated_dispatches": self.donated_dispatches,
+            "aot_cache_hits": self.aot_cache_hits,
         }
 
 
@@ -158,6 +171,8 @@ class CXLMemSim:
         max_events_per_access: int = 64,  # trace fidelity (higher = finer)
         async_analysis: Optional[bool] = None,  # None: auto (see below)
         engine: Optional[AnalysisEngine] = None,  # None: the shared default
+        pipeline: bool = False,  # device-resident epoch pipeline (AOT + donation)
+        warmup: bool = False,  # pre-compile the pipeline executable at attach
     ):
         self.topology = topology
         self.flat = topology.flatten()
@@ -174,6 +189,8 @@ class CXLMemSim:
         self.check_capacity = check_capacity
         self.max_events_per_access = max_events_per_access
         self.engine = engine
+        self.pipeline = pipeline
+        self.warmup = warmup
         # async analysis overlaps analyzer work with native execution; delay
         # injection needs the delay before the step returns, so it forces
         # the synchronous path
@@ -209,7 +226,9 @@ class AttachedProgram(EngineClient):
         self.regions = regions
         self.calibration = calibration
         if sim.analyzer_kind == "epoch":
-            self._analyzer = EpochAnalyzer(sim.flat, n_windows=sim.n_windows)
+            self._analyzer = EpochAnalyzer(
+                sim.flat, n_windows=sim.n_windows, pipeline=sim.pipeline
+            )
         else:
             self._analyzer = FineGrainedSimulator(sim.flat, bandwidth_mode="per_txn")
         self._cache = (
@@ -229,6 +248,11 @@ class AttachedProgram(EngineClient):
             self._handle: Optional[EngineHandle] = eng.register(self._analyzer)
         else:
             self._handle = None
+        if sim.warmup and isinstance(self._analyzer, EpochAnalyzer):
+            # pre-compile the pipeline executable on this step's trace shapes
+            # so the first real dispatch is a pure AOT-cache hit
+            traces, _, _ = self._traces()
+            self._analyzer.warmup(traces)
 
     # ------------------------------------------------------------------ #
 

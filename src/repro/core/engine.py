@@ -56,7 +56,7 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from .analyzer import DelayBreakdown, EpochAnalyzer, analyze_any
+from .analyzer import DelayBreakdown, EpochAnalyzer, PendingBatch, analyze_any
 from .events import EventStager, MemEvents
 
 __all__ = [
@@ -80,6 +80,7 @@ def dispatch_key(analyzer) -> Optional[Tuple]:
         return None
     flat = analyzer.flat
     return (
+        bool(analyzer.pipeline),
         bool(analyzer.fused),
         int(analyzer.n_windows),
         jnp.dtype(analyzer.dtype).name,
@@ -102,12 +103,25 @@ def fold_dispatch_stats(report, stats, group_size: int) -> None:
     ``padded_waste`` / ``coalesced_group_size`` fields (SimReport,
     FabricReport).  Device counts, shard widths and group sizes keep their
     maxima (did sharding/coalescing ever engage, and how wide); padded
-    waste keeps the worst fraction seen.  Callers hold their report lock.
+    waste keeps the worst fraction seen.  The pipeline timing split
+    (``stage_s``/``transfer_s``/``compile_s``/``compute_s``) accumulates
+    across dispatches, and ``donated_dispatches``/``aot_cache_hits`` count
+    how often donation and the AOT cache engaged — coalesced dispatches
+    report zero timing on every member handle, so cross-session sharing
+    never double-counts.  Callers hold their report lock.
     """
     if stats is not None:
         report.devices_used = max(report.devices_used, stats.devices_used)
         report.shard_rows = max(report.shard_rows, stats.shard_rows)
         report.padded_waste = max(report.padded_waste, stats.padded_fraction)
+        report.stage_s += stats.stage_s
+        report.transfer_s += stats.transfer_s
+        report.compile_s += stats.compile_s
+        report.compute_s += stats.compute_s
+        if stats.donated:
+            report.donated_dispatches += 1
+        if stats.aot_cache_hit:
+            report.aot_cache_hits += 1
     if group_size:
         report.coalesced_group_size = max(
             report.coalesced_group_size, int(group_size)
@@ -121,6 +135,21 @@ class _Submission:
     scales: Optional[List]
     fold: Optional[Callable[[DelayBreakdown, float], None]]
     future: Future
+
+
+@dataclasses.dataclass
+class _Launched:
+    """One launched-but-unresolved dispatch in the worker's depth-1
+    pipeline.  Exactly one of ``pending`` (overlapped solo launch) or
+    ``bds`` (synchronously computed results) is set when ``error`` is
+    None."""
+
+    group: List[_Submission]
+    live: List[_Submission]
+    pending: Optional[PendingBatch]
+    bds: Optional[List[DelayBreakdown]]
+    launch_s: float
+    error: Optional[BaseException]
 
 
 class EngineHandle:
@@ -389,7 +418,11 @@ class AnalysisEngine:
         dt = np.dtype(jnp.dtype(analyzer.dtype).name)
         st = self._stagers.get(dt)
         if st is None:
-            st = self._stagers[dt] = EventStager(dt)
+            # slots=2: the dispatcher overlaps batch k+1's staging/H2D with
+            # batch k's compute, so staging must rotate to a fresh buffer
+            # slot while the previous slot's planes may still back an
+            # in-flight transfer
+            st = self._stagers[dt] = EventStager(dt, slots=2)
         return st
 
     def _pop_group_locked(self) -> List[_Submission]:
@@ -412,25 +445,51 @@ class AnalysisEngine:
         return group
 
     def _worker(self) -> None:
+        # Depth-1 software pipeline: after launching a dispatch, the worker
+        # does NOT block on its result — it first pops and launches the next
+        # group (staging + H2D + async device dispatch), so batch k+1's host
+        # work overlaps batch k's device compute.  The previous dispatch is
+        # finished (device_get, folds, future resolution) only once the next
+        # one is in flight, or immediately when the queue drains, so a lone
+        # submission never waits on a successor.
+        pend: Optional[_Launched] = None
         try:
             while True:
+                group = None
                 with self._cv:
-                    while not self._pending and not self._closed:
-                        self._cv.wait(1.0)
-                    if not self._pending:
+                    if pend is None:
+                        while not self._pending and not self._closed:
+                            self._cv.wait(1.0)
+                    if self._pending:
+                        group = self._pop_group_locked()
+                        self._active += 1
+                    elif pend is None and self._closed:
                         return  # closed and drained
-                    group = self._pop_group_locked()
-                    self._active += 1
-                self._process(group)
+                if group is not None:
+                    launched = self._launch(group)
+                    if pend is not None:
+                        self._finish(pend)
+                    pend = launched
+                else:
+                    self._finish(pend)
+                    pend = None
         except BaseException:
             with self._cv:
                 self._broken = True
                 self._cv.notify_all()
             raise
 
-    def _process(self, group: List[_Submission]) -> None:
+    def _launch(self, group: List[_Submission]) -> "_Launched":
+        """Stage, transfer and launch one group without blocking on results.
+
+        Solo :class:`EpochAnalyzer` submissions launch asynchronously
+        (:meth:`EpochAnalyzer.launch_batch`); DES analyzers and coalesced
+        stacks compute synchronously here and carry finished breakdowns.
+        Never raises — a launch failure is carried in the returned record
+        and surfaced by :meth:`_finish`."""
         stager = self._stager_for(group[0].handle.analyzer)
         live = group
+        t0 = time.perf_counter()
         try:
             if len(group) > 1:
                 # per-session validation BEFORE stacking: one session's bad
@@ -446,9 +505,23 @@ class AnalysisEngine:
                         self._resolve(sub.future, error=e)
                     else:
                         live.append(sub)
-            t0 = time.perf_counter()
+            pending: Optional[PendingBatch] = None
+            bds: Optional[List[DelayBreakdown]] = None
             if not live:
-                bds: List[DelayBreakdown] = []
+                bds = []
+            elif (
+                len(live) == 1
+                and isinstance(live[0].handle.analyzer, EpochAnalyzer)
+                and type(live[0].handle.analyzer).analyze_batch
+                is EpochAnalyzer.analyze_batch
+            ):
+                # the overlapped fast path talks to launch_batch directly;
+                # subclasses that override analyze_batch (tests inject
+                # failures there) keep the classic synchronous route
+                sub = live[0]
+                pending = sub.handle.analyzer.launch_batch(
+                    sub.traces, sub.scales, stager=stager
+                )
             elif len(live) == 1:
                 sub = live[0]
                 bds = [sub.handle._analyze(sub.traces, sub.scales, stager)]
@@ -459,7 +532,28 @@ class AnalysisEngine:
                     stager=stager,
                     mesh=self.mesh,
                 )
-            elapsed = time.perf_counter() - t0
+            return _Launched(
+                group, live, pending, bds, time.perf_counter() - t0, None
+            )
+        except BaseException as e:
+            return _Launched(group, live, None, None, time.perf_counter() - t0, e)
+
+    def _finish(self, launched: "_Launched") -> None:
+        """Resolve one launched group: block on the device result if it was
+        an overlapped launch, run folds, resolve futures, release inflight
+        slots."""
+        group, live = launched.group, launched.live
+        try:
+            if launched.error is not None:
+                raise launched.error
+            t0 = time.perf_counter()
+            if launched.pending is not None:
+                bds: List[DelayBreakdown] = [launched.pending.finish()]
+            else:
+                bds = launched.bds
+            # launch work + exposed finish wait; the overlap gap (spent
+            # launching the NEXT group) is deliberately excluded
+            elapsed = launched.launch_s + (time.perf_counter() - t0)
             if live:
                 # written before the fold loop so fold callbacks (and any
                 # reader after the future resolves) see this dispatch's

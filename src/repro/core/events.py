@@ -90,6 +90,12 @@ class MemEvents:
         return float(self.bytes_.sum())
 
     def sorted_by_time(self) -> "MemEvents":
+        # Monotone fast path: a stable argsort of a non-decreasing key is the
+        # identity permutation, so an already-sorted trace (the tracer's
+        # common case, and everything downstream of merge_host_traces) costs
+        # one O(N) check instead of an argsort plus seven gathers.
+        if self.n <= 1 or bool(np.all(self.t_ns[1:] >= self.t_ns[:-1])):
+            return self
         order = np.argsort(self.t_ns, kind="stable")
         return self.take(order)
 
@@ -145,25 +151,37 @@ class MemEvents:
         region: Optional[Iterable[int]] = None,
         host: Optional[Iterable[int]] = None,
     ) -> "MemEvents":
-        t = np.asarray(list(t_ns), np.float64)
-        p = np.asarray(list(pool), np.int32)
-        b = np.asarray(list(bytes_), np.float64)
+        t = _as_column(t_ns, np.float64)
+        p = _as_column(pool, np.int32)
+        b = _as_column(bytes_, np.float64)
         w = (
-            np.asarray(list(is_write), bool)
+            _as_column(is_write, bool)
             if is_write is not None
             else np.zeros(len(t), bool)
         )
         r = (
-            np.asarray(list(region), np.int32)
+            _as_column(region, np.int32)
             if region is not None
             else np.zeros(len(t), np.int32)
         )
         h = (
-            np.asarray(list(host), np.int32)
+            _as_column(host, np.int32)
             if host is not None
             else np.zeros(len(t), np.int32)
         )
         return MemEvents(t, p, b, w, r, host=h)
+
+
+def _as_column(x, dtype) -> np.ndarray:
+    """Coerce a build() input to a 1-D array without the list round-trip.
+
+    ndarrays and plain sequences go straight to ``np.asarray`` (an O(copy)
+    conversion, or free when dtype already matches); only true generators are
+    materialized first.
+    """
+    if not isinstance(x, (np.ndarray, list, tuple)):
+        x = list(x)
+    return np.asarray(x, dtype)
 
 
 def concat_events(traces: Sequence[MemEvents]) -> MemEvents:
@@ -210,6 +228,13 @@ def split_by_host(trace: MemEvents, n_hosts: int) -> List[MemEvents]:
 # --------------------------------------------------------------------------- #
 
 
+def _bucket_pow2(n: int, floor: int) -> int:
+    v = max(int(floor), 1)
+    while v < n:
+        v *= 2
+    return v
+
+
 class EventStager:
     """Reusable host staging buffers for bucketed, batched epoch analysis.
 
@@ -231,14 +256,30 @@ class EventStager:
 
     _FIELDS = ("t", "pool", "bytes", "weight", "host", "valid")
 
-    def __init__(self, time_dtype=np.float32):
+    def __init__(self, time_dtype=np.float32, slots: int = 1):
         self.time_dtype = np.dtype(time_dtype)
-        self._bufs: Dict[Tuple[int, int], Dict[str, np.ndarray]] = {}
+        # ``slots`` > 1 turns each bucket's buffer set into a ring: every
+        # stage() call rotates to the next slot before filling, so a caller
+        # overlapping H2D/compute of dispatch k with the staging of k+1
+        # (the engine's double-buffered pipeline) never overwrites host
+        # planes an in-flight transfer may still be reading.
+        self.slots = max(1, int(slots))
+        self._bufs: Dict[Tuple[int, int, int], Dict[str, np.ndarray]] = {}
+        self._turn: Dict[Tuple[int, int], int] = {}
+        self._pack_bufs: Dict[Tuple[int, int, int], Dict[str, np.ndarray]] = {}
         self._stack_bufs: Dict[Tuple[int, int, int], Dict[str, np.ndarray]] = {}
         self._stack_filled: Dict[Tuple[int, int, int], int] = {}
+        self._cap_hwm: Dict[Tuple[int, int, int], Tuple[int, ...]] = {}
+
+    def rotate(self, b_bucket: int, n_bucket: int) -> int:
+        """Advance this bucket's ring and return the now-current slot."""
+        key = (b_bucket, n_bucket)
+        slot = (self._turn.get(key, self.slots - 1) + 1) % self.slots
+        self._turn[key] = slot
+        return slot
 
     def buffers(self, b_bucket: int, n_bucket: int) -> Dict[str, np.ndarray]:
-        key = (b_bucket, n_bucket)
+        key = (b_bucket, n_bucket, self._turn.get((b_bucket, n_bucket), 0))
         buf = self._bufs.get(key)
         if buf is None:
             buf = {
@@ -268,9 +309,88 @@ class EventStager:
         """
         if len(traces) > b_bucket:
             raise ValueError(f"{len(traces)} traces exceed batch bucket {b_bucket}")
+        self.rotate(b_bucket, n_bucket)
         buf = self.buffers(b_bucket, n_bucket)
         self._fill_rows(buf, traces, b_bucket)
         return buf
+
+    def _pack_buffers(self, b_bucket: int, width: int) -> Dict[str, np.ndarray]:
+        key = (b_bucket, width, self._turn.get((b_bucket, width), 0))
+        buf = self._pack_bufs.get(key)
+        if buf is None:
+            buf = {
+                "t": np.zeros((b_bucket, width), self.time_dtype),
+                "idx": np.zeros((b_bucket, width), np.int32),
+            }
+            self._pack_bufs[key] = buf
+        return buf
+
+    def stage_packed(
+        self,
+        traces: Sequence["MemEvents"],
+        b_bucket: int,
+        n_bucket: int,
+        enter_stage: np.ndarray,
+        n_stages: int,
+        cap_floor: int = 16,
+    ) -> Tuple[Dict[str, np.ndarray], Dict[str, np.ndarray], Tuple[int, ...]]:
+        """Pipeline staging: the full planes of :meth:`stage` plus per-stage
+        packed ``(t, idx)`` planes feeding the device-resident chain cascade.
+
+        ``enter_stage[pool]`` gives the cascade stage position at which an
+        event routed to ``pool`` first enters the fabric (-1 = local, never
+        routed).  Because every staged row is time-sorted and extracting a
+        per-stage subsequence preserves that order, each packed segment is
+        already a sorted run — the merge into one fabric timeline happens on
+        device, with **zero host argsort** beyond the monotone check of
+        :meth:`_fill_rows`.  Segment ``p`` occupies ``caps[p]`` slots (a
+        power-of-two bucket of the batch-max count, shared across rows so
+        the packed width is static per dispatch); pad slots carry
+        ``t=+inf, idx=-1`` and sort harmlessly to every merge's tail.
+        ``idx`` values are positions into the staged (sorted) full row.
+        """
+        if len(traces) > b_bucket:
+            raise ValueError(f"{len(traces)} traces exceed batch bucket {b_bucket}")
+        self.rotate(b_bucket, n_bucket)
+        buf = self.buffers(b_bucket, n_bucket)
+        self._fill_rows(buf, traces, b_bucket)
+        enter = np.asarray(enter_stage, np.int32)
+        n_stages = int(n_stages)
+        counts = np.zeros((max(len(traces), 1), n_stages), np.int64)
+        depth_rows: List[np.ndarray] = []
+        for row, ev in enumerate(traces):
+            d = enter[buf["pool"][row, : ev.n]]
+            depth_rows.append(d)
+            routed = d >= 0
+            if routed.any():
+                counts[row, :] = np.bincount(d[routed], minlength=n_stages)
+        caps = tuple(
+            _bucket_pow2(int(counts[:, p].max()), cap_floor)
+            for p in range(n_stages)
+        )
+        # sticky caps: never shrink within a (batch, length) bucket, so the
+        # packed width — and with it the AOT executable key — stabilizes
+        # after the first few dispatches instead of flapping with each
+        # epoch's depth distribution (zero steady-state recompiles)
+        cap_key = (b_bucket, n_bucket, n_stages)
+        prev = self._cap_hwm.get(cap_key)
+        if prev is not None:
+            caps = tuple(max(c, p) for c, p in zip(caps, prev))
+        self._cap_hwm[cap_key] = caps
+        width = int(sum(caps))
+        self._turn[(b_bucket, width)] = self._turn.get((b_bucket, n_bucket), 0)
+        pack = self._pack_buffers(b_bucket, width)
+        pack["t"].fill(np.inf)
+        pack["idx"].fill(-1)
+        for row, d in enumerate(depth_rows):
+            off = 0
+            for p in range(n_stages):
+                sel = np.flatnonzero(d == p)
+                m = sel.shape[0]
+                pack["t"][row, off : off + m] = buf["t"][row, sel]
+                pack["idx"][row, off : off + m] = sel
+                off += caps[p]
+        return buf, pack, caps
 
     @staticmethod
     def _fill_rows(

@@ -149,6 +149,13 @@ class FabricReport:
     shard_rows: int = 0
     padded_waste: float = 0.0
     coalesced_group_size: int = 1
+    # pipeline-phase timing (sums over this session's dispatches)
+    stage_s: float = 0.0
+    transfer_s: float = 0.0
+    compile_s: float = 0.0
+    compute_s: float = 0.0
+    donated_dispatches: int = 0
+    aot_cache_hits: int = 0
     per_pool_latency_ns: Optional[np.ndarray] = None
     per_switch_congestion_ns: Optional[np.ndarray] = None
     per_switch_bandwidth_ns: Optional[np.ndarray] = None
@@ -177,6 +184,12 @@ class FabricReport:
             "shard_rows": self.shard_rows,
             "padded_waste": self.padded_waste,
             "coalesced_group_size": self.coalesced_group_size,
+            "stage_s": self.stage_s,
+            "transfer_s": self.transfer_s,
+            "compile_s": self.compile_s,
+            "compute_s": self.compute_s,
+            "donated_dispatches": self.donated_dispatches,
+            "aot_cache_hits": self.aot_cache_hits,
         }
         for hc in self.hosts:
             out[f"host{hc.host}_native_s"] = hc.native_s
@@ -209,6 +222,7 @@ class FabricSession(EngineClient):
         max_events_per_access: int = 64,
         async_analysis: bool = True,
         engine: Optional[AnalysisEngine] = None,  # None: the shared default
+        pipeline: bool = False,  # device-resident epoch pipeline (AOT + donation)
     ):
         if not tenants:
             raise ValueError("need at least one tenant")
@@ -237,7 +251,9 @@ class FabricSession(EngineClient):
         self.epoch = epoch
         self.hw = hw
         self.max_events_per_access = max_events_per_access
-        self._analyzer = EpochAnalyzer(self.flat, n_windows=n_windows, impl=impl)
+        self._analyzer = EpochAnalyzer(
+            self.flat, n_windows=n_windows, impl=impl, pipeline=pipeline
+        )
         if coherency is not None and H == 1:
             # trace-driven coherency needs a second host to derive sharers
             # from; silently reporting zero BI traffic would look like a

@@ -48,6 +48,7 @@ slowdown.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -521,10 +522,12 @@ class FleetSim:
         n_bucket = bucket_pow2(max(n_max, 1))
         b_bucket = bucket_pow2(B, floor=1)
         k_bucket = pad_to_multiple(bucket_pow2(K, floor=1), n_shards)
+        t_stage = time.perf_counter()
         buf = self._stager.stage_stack(rack_traces, k_bucket, b_bucket, n_bucket)
         span = np.maximum(buf["span"], self.bw_window_ns)
         bw_window = np.maximum(span / self.n_windows, 1.0)
         scale = np.ones((k_bucket, b_bucket, V), self._np_dtype)
+        stage_s = time.perf_counter() - t_stage
 
         ls = self._leaf_stack
 
@@ -537,16 +540,11 @@ class FleetSim:
                 axis=0,
             )
 
-        self.last_dispatch = DispatchStats(
-            devices_used=n_shards,
-            shard_rows=k_bucket // n_shards if mesh is not None else 0,
-            rows=K,
-            padded_fraction=float(k_bucket - K) / k_bucket,
-        )
         self.dispatch_count += 1
         put_k = lambda a: shard_rows(mesh, jnp.asarray(a))
         put_r = lambda a: replicated(mesh, a)
-        out = self._fleet_jit(
+        t_put = time.perf_counter()
+        dev_args = (
             put_k(buf["t"]),
             put_k(buf["pool"]),
             put_k(buf["bytes"]),
@@ -561,6 +559,19 @@ class FleetSim:
             put_r(self._route),
             put_k(pad_k(np.asarray(ls.switch_stt_ns, self._np_dtype))),
             put_k(pad_k(np.asarray(ls.switch_bandwidth_gbps, self._np_dtype))),
+        )
+        transfer_s = time.perf_counter() - t_put
+        self.last_dispatch = DispatchStats(
+            devices_used=n_shards,
+            shard_rows=k_bucket // n_shards if mesh is not None else 0,
+            rows=K,
+            padded_fraction=float(k_bucket - K) / k_bucket,
+            stage_s=stage_s,
+            transfer_s=transfer_s,
+        )
+        t_run = time.perf_counter()
+        out = self._fleet_jit(
+            *dev_args,
             stage_order=self._stage_order,
             n_windows=self.n_windows,
             n_hosts=H,
@@ -569,6 +580,9 @@ class FleetSim:
             merge_plan=self._merge_plan,
         )
         lat, cong, bw, ppl, psc, psb, phl, phc, phb = jax.device_get(out)
+        self.last_dispatch = dataclasses.replace(
+            self.last_dispatch, compute_s=time.perf_counter() - t_run
+        )
         return [
             DelayBreakdown(
                 float(lat[k]), float(cong[k]), float(bw[k]),

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -101,6 +102,10 @@ class SweepResult:
     devices_used: int = 1  # devices the scenario axis sharded over
     shard_rows: int = 0  # scenarios per device after padding (0 = unsharded)
     padded_fraction: float = 0.0  # padded scenario rows / dispatched rows
+    # phase timing of this run's dispatch (host pack / H2D / device compute)
+    stage_s: float = 0.0
+    transfer_s: float = 0.0
+    compute_s: float = 0.0
 
     @property
     def k(self) -> int:
@@ -164,6 +169,9 @@ class SweepResult:
                 "devices_used": self.devices_used,
                 "shard_rows": self.shard_rows,
                 "padded_fraction": self.padded_fraction,
+                "stage_s": self.stage_s,
+                "transfer_s": self.transfer_s,
+                "compute_s": self.compute_s,
             }
             for i, (s, b) in enumerate(zip(self.scenarios, self.breakdowns))
         ]
@@ -517,31 +525,40 @@ class ScenarioSuite:
 
         put_k = lambda a: shard_rows(mesh, jnp.asarray(pad_k(np.asarray(a))))
         put_r = lambda a: replicated(mesh, a)
+        fd = self.dtype
+        # host staging (pack), H2D transfer, then the dispatch proper — the
+        # same phase split DispatchStats reports for the epoch pipeline
+        t0 = time.perf_counter()
+        host_r = [
+            stack_np("t"), stack_np("bytes"), stack_np("weight"),
+            stack_np("host"), stack_np("valid"), stack_np("region"),
+            np.asarray(bw_window, self._np_dtype),
+        ]
+        host_k = [
+            group_of, cascade_of, assign, lat_scale,
+            np.asarray(topo_stack.pool_latency_ns, self._np_dtype),
+            np.asarray(topo_stack.local_latency_ns, self._np_dtype),
+            np.asarray(topo_stack.switch_bandwidth_gbps, self._np_dtype),
+        ]
+        stage_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        dev_r = [put_r(jnp.asarray(a, fd) if a.dtype.kind == "f" else jnp.asarray(a)) for a in host_r]
+        dev_cas = [put_r(jnp.asarray(cas_group)), put_r(jnp.asarray(cas_assign)), put_r(jnp.asarray(cas_stt))]
+        dev_k = [put_k(a) for a in host_k]
+        transfer_s = time.perf_counter() - t0
         self.last_dispatch = DispatchStats(
             devices_used=n_shards,
             shard_rows=Kp // n_shards if mesh is not None else 0,
             rows=K,
             padded_fraction=float(Kp - K) / Kp,
+            stage_s=stage_s,
+            transfer_s=transfer_s,
         )
-        fd = self.dtype
+        t0 = time.perf_counter()
         out = self._sweep_fn(
-            put_r(jnp.asarray(stack_np("t"))),
-            put_r(jnp.asarray(stack_np("bytes"))),
-            put_r(jnp.asarray(stack_np("weight"))),
-            put_r(jnp.asarray(stack_np("host"))),
-            put_r(jnp.asarray(stack_np("valid"))),
-            put_r(jnp.asarray(stack_np("region"))),
-            put_r(jnp.asarray(bw_window, fd)),
-            put_r(jnp.asarray(cas_group)),
-            put_r(jnp.asarray(cas_assign)),
-            put_r(jnp.asarray(cas_stt)),
-            put_k(group_of),
-            put_k(cascade_of),
-            put_k(assign),
-            put_k(lat_scale),
-            put_k(np.asarray(topo_stack.pool_latency_ns, self._np_dtype)),
-            put_k(np.asarray(topo_stack.local_latency_ns, self._np_dtype)),
-            put_k(np.asarray(topo_stack.switch_bandwidth_gbps, self._np_dtype)),
+            *dev_r,
+            *dev_cas,
+            *dev_k,
             put_r(self._bits_table),
             put_r(self._route),
             stage_order=self._stage_order,
@@ -550,6 +567,9 @@ class ScenarioSuite:
             merge_plan=self._merge_plan,
         )
         lat, cong, bw, ppl, psc, psb, phl, phc, phb = jax.device_get(out)
+        self.last_dispatch = dataclasses.replace(
+            self.last_dispatch, compute_s=time.perf_counter() - t0
+        )
         breakdowns = [
             DelayBreakdown(
                 float(lat[k]), float(cong[k]), float(bw[k]),
@@ -572,6 +592,9 @@ class ScenarioSuite:
             devices_used=self.last_dispatch.devices_used,
             shard_rows=self.last_dispatch.shard_rows,
             padded_fraction=self.last_dispatch.padded_fraction,
+            stage_s=self.last_dispatch.stage_s,
+            transfer_s=self.last_dispatch.transfer_s,
+            compute_s=self.last_dispatch.compute_s,
         )
 
     # ------------------------------------------------------------------ #

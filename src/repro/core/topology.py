@@ -39,6 +39,7 @@ __all__ = [
     "FlatTopology",
     "FlatTopologyStack",
     "flatten_stack",
+    "chained_topology",
     "figure1_topology",
     "local_only_topology",
     "pooled_topology",
@@ -613,6 +614,42 @@ def figure1_topology() -> Topology:
         rc_bandwidth_gbps=128.0,
         rc_stt_ns=0.5,
     )
+
+
+def chained_topology(depth: int = 8, attach_bw: float = 32.0) -> Topology:
+    """A daisy-chained expander string: ``depth`` switches in series, one
+    expander hanging off each.
+
+    The strictly nested switch masks (every event through ``sw{d}`` also
+    traverses ``sw0..sw{d-1}``) make this the canonical chain-eligible
+    topology for the device-resident epoch pipeline
+    (:func:`repro.core.analyzer.plan_chain`), and the deep cascade is what
+    stresses the congestion stages — the pipeline benchmark's workhorse.
+    """
+    if depth < 1:
+        raise ValueError("chained_topology needs depth >= 1")
+    pools = [Pool("local_dram", 88.9, 76.8, int(96 * 2**30), is_local=True)]
+    switches = []
+    for d in range(depth):
+        switches.append(
+            Switch(
+                f"sw{d}",
+                latency_ns=70.0,
+                bandwidth_gbps=64.0,
+                stt_ns=2.0 + 0.25 * d,
+                parent=f"sw{d - 1}" if d else None,
+            )
+        )
+        pools.append(
+            Pool(
+                f"exp{d}",
+                170.0,
+                attach_bw,
+                int(256 * 2**30),
+                parent=f"sw{d}",
+            )
+        )
+    return Topology(pools=pools, switches=switches)
 
 
 def two_tier_topology(

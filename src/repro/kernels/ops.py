@@ -29,11 +29,14 @@ from .ssd_scan import ssd_scan as _ssd_pallas
 
 __all__ = [
     "attention",
+    "chain_cascade",
     "congestion_cascade",
     "congestion_queue",
     "get_implementation",
     "set_implementation",
     "ssd",
+    "staging_sort",
+    "two_run_merge",
 ]
 
 _IMPL: Optional[str] = None
@@ -165,3 +168,30 @@ def congestion_cascade(
         t_sorted, route_bits, hosts, stts, n_hosts=n_hosts, block=block,
         interpret=(i == "pallas_interpret"),
     )
+
+
+def two_run_merge(x, lead, *payloads, impl: Optional[str] = None):
+    """Stable merge of two interleaved sorted runs (envelope formulation).
+
+    All implementations route to the XLA ref: the cummax/searchsorted/
+    scatter formulation is already a handful of fused elementwise passes, so
+    a hand-written Pallas body has nothing left to win on current backends.
+    """
+    _resolve(impl)
+    return ref.two_run_merge(x, lead, *payloads)
+
+
+def staging_sort(x, run_caps, *payloads, impl: Optional[str] = None):
+    """On-device stable sort of concatenated sorted runs (merge tree of
+    :func:`two_run_merge` rounds); bitwise-equal to a host stable argsort of
+    the run-major concatenation.  Ref-only, as for :func:`two_run_merge`."""
+    _resolve(impl)
+    return ref.staging_sort(x, run_caps, *payloads)
+
+
+def chain_cascade(t_pack, idx_pack, stts, seg_caps, impl: Optional[str] = None):
+    """Compact suffix cascade over per-stage packed sorted runs — the
+    device-resident pipeline's fused merge+scan.  Ref-only, as for
+    :func:`two_run_merge`."""
+    _resolve(impl)
+    return ref.chain_cascade(t_pack, idx_pack, stts, seg_caps)

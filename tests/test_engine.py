@@ -447,6 +447,8 @@ def test_sim_report_summary_keys_locked():
         "migration_moved_bytes", "cache_hit_fraction",
         "dropped_batches", "dropped_epochs",
         "devices_used", "shard_rows", "padded_waste", "coalesced_group_size",
+        "stage_s", "transfer_s", "compile_s", "compute_s",
+        "donated_dispatches", "aot_cache_hits",
     }
 
 
@@ -458,6 +460,8 @@ def test_fabric_report_summary_keys_locked():
         "migration_moved_bytes", "cache_hit_fraction",
         "dropped_batches", "dropped_epochs",
         "devices_used", "shard_rows", "padded_waste", "coalesced_group_size",
+        "stage_s", "transfer_s", "compile_s", "compute_s",
+        "donated_dispatches", "aot_cache_hits",
     }
     per_host = {
         f"host{h}_{k}" for h in (0, 1)
