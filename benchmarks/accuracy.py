@@ -13,7 +13,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core.analyzer import EpochAnalyzer, FineGrainedSimulator, analyze_ref
+from repro.core.analyzer import FineGrainedSimulator, analyze_ref
 from repro.core.events import synthetic_trace
 from repro.core.topology import figure1_topology, two_tier_topology
 

@@ -35,7 +35,6 @@ import platform
 import time
 from typing import Dict, List
 
-import numpy as np
 
 from repro.core.analyzer import EpochAnalyzer, analyze_ref
 from repro.core.events import synthetic_trace

@@ -27,11 +27,10 @@ import json
 import platform
 import sys
 import time
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import (
     Access,

@@ -37,7 +37,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core.analyzer import EpochAnalyzer, analyze_ref
+from repro.core.analyzer import EpochAnalyzer
 from repro.core.events import MemEvents, merge_host_traces, synthetic_trace
 from repro.core.topology import pooled_topology
 

@@ -33,7 +33,7 @@ import json
 import platform
 import sys
 import time
-from typing import Dict, List
+from typing import List
 
 import numpy as np
 

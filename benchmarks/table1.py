@@ -22,7 +22,6 @@ slowdown on real apps; ~73× faster than Gem5).
 
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Dict, List, Tuple
 
@@ -34,7 +33,6 @@ from repro.core import (
     Access,
     CXLMemSim,
     ClassMapPolicy,
-    EpochSchedule,
     Phase,
     RegionMap,
     figure1_topology,

@@ -8,7 +8,6 @@ pooled CXL expander — what does each management granularity cost?
 """
 
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ Interrupt it and re-run: it resumes from the newest committed checkpoint.
 """
 
 import argparse
-import dataclasses
 
 import jax.numpy as jnp
 

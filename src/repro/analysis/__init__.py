@@ -1,0 +1,50 @@
+"""simlint — repo-aware static analysis + runtime sanitizers.
+
+This package encodes the invariants this codebase has historically shipped
+bugs against, as machine-checkable rules:
+
+  * **lock-discipline** (:mod:`repro.analysis.locks`): classes declare which
+    attributes a lock guards (:func:`repro.analysis.annotations.guarded_by`);
+    every lexical read/write of a guarded attribute must sit inside a
+    ``with <...>.<lock>:`` block.  The PR-5 report race (async dispatcher
+    folding into ``SimReport`` while the stepping thread wrote
+    running-statistic snapshots unlocked) becomes un-reintroducible.
+  * **jit-hygiene** (:mod:`repro.analysis.jit`): no host-side ``np.`` /
+    ``.item()`` / ``float()`` / ``bool()`` on traced values inside jitted or
+    AOT-dispatched functions; no ``.lower().compile()`` outside the
+    :class:`~repro.core.aot.AotDispatchCache` build convention; pipeline
+    entry points must donate their staging planes; no f64 dtypes inside f32
+    kernel paths.
+  * **contracts** (:mod:`repro.analysis.contracts`): ``summary()`` key-set
+    literals must match their key-lock tests, and event-trace rebuilds must
+    thread the ``weight``/``host`` columns (the twice-shipped PR-2 drop).
+
+Run it::
+
+    PYTHONPATH=src python -m repro.analysis --strict
+
+Suppress a finding with an inline ``simlint: ignore[rule] -- justification``
+comment on the finding's line (``--strict`` rejects bare suppressions and
+suppressions that no longer match anything).
+
+The runtime half lives in :mod:`repro.analysis.sanitize`:
+:class:`~repro.analysis.sanitize.RecompileSanitizer` (fails a scope that
+triggers steady-state jit/AOT lowerings) and
+:class:`~repro.analysis.sanitize.LockOrderSanitizer` (builds a lock-order
+graph from instrumented acquisitions; cycles -> potential-deadlock report).
+"""
+
+from .findings import Finding
+from .framework import CheckConfig, Checker, SourceFile, registered_checkers, run_checks
+
+__all__ = [
+    "CheckConfig",
+    "Checker",
+    "Finding",
+    "SourceFile",
+    "registered_checkers",
+    "run_checks",
+]
+
+# importing the checker modules registers them
+from . import contracts, jit, locks  # noqa: E402,F401  (registration imports)

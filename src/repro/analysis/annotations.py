@@ -1,0 +1,62 @@
+"""Source-level annotations the simlint checkers understand.
+
+These are ordinary runtime objects (introspectable, importable with zero
+dependencies on the analysis framework) whose *syntactic* form is what the
+AST checkers read — annotating a class never changes its behavior.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple, TypeVar
+
+__all__ = ["guarded_by", "single_threaded"]
+
+F = TypeVar("F", bound=Callable)
+
+
+def guarded_by(lock: str, *fields: str) -> Dict[str, Tuple[str, ...]]:
+    """Declare that ``fields`` may only be accessed while ``<lock>`` is held.
+
+    Used as a class-body declaration::
+
+        class Session:
+            _simlint_guards = guarded_by("_report_lock", "_report")
+
+    Each field is an attribute name (``"_report"`` matches any
+    ``<expr>._report``) or a dotted pair (``"_handle.dropped_batches"``
+    matches only ``<expr>._handle.dropped_batches``), so fields of owned
+    sub-objects can be guarded without claiming every same-named attribute.
+    ``lock`` is matched by the *final* attribute name of a with-item's
+    context expression: ``with self._cv:``, ``with eng._cv:`` and
+    ``with self.engine._cv:`` all hold ``"_cv"`` — the convention is that a
+    lock attribute name identifies one lock protocol wherever it appears.
+
+    The lock-discipline checker exempts ``__init__``/``__post_init__``
+    (single-threaded by construction), methods whose name ends in
+    ``_locked`` (the caller-holds-the-lock convention this repo already
+    uses), and methods decorated with :func:`single_threaded`.
+
+    Declarations merge with ``|``::
+
+        _simlint_guards = guarded_by("_cv", "_pending") | guarded_by(...)
+    """
+    return {lock: tuple(fields)}
+
+
+def single_threaded(reason: str) -> Callable[[F], F]:
+    """Mark a method as running on one thread only (checker-exempt).
+
+    The reason is mandatory — an unexplained exemption is how the next
+    reader reintroduces the race::
+
+        @single_threaded("dispatcher-thread only: stagers never escape it")
+        def _stager_for(self, analyzer): ...
+    """
+    if not isinstance(reason, str) or not reason.strip():
+        raise ValueError("single_threaded requires a non-empty reason string")
+
+    def mark(fn: F) -> F:
+        fn.__simlint_single_threaded__ = reason  # type: ignore[attr-defined]
+        return fn
+
+    return mark

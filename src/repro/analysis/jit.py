@@ -1,0 +1,328 @@
+"""Jit-hygiene checker — the recompile/cache-bypass/host-sync bug class.
+
+Four rules, all rooted in bugs this repo has actually shipped or documented:
+
+* ``jit-host-sync`` — inside a function dispatched through ``jax.jit`` /
+  the AOT cache / ``pallas_call``, calling ``np.*``, ``.item()``,
+  ``float()`` / ``int()`` / ``bool()`` on a traced value (or branching on
+  one) forces a host synchronization or a trace error.  Static
+  (``static_argnames``) parameters are not traced and are exempt via a
+  per-function taint pass.
+* ``jit-aot-bypass`` — ``.lower(...).compile()`` outside the
+  :class:`~repro.core.aot.AotDispatchCache` ``build`` convention: AOT
+  compilation does not populate jit's own cache, so a bypassing site
+  compiles once per call site *and* once per jit path (the documented
+  footgun in ``core/aot.py``).
+* ``jit-donate`` — pipeline entry points (``CheckConfig.donate_required``)
+  take donated staging planes; jitting them without ``donate_argnums``
+  silently doubles peak device memory for every dispatch.
+* ``jit-f64`` — ``float64`` dtypes inside jitted/kernel functions leak f64
+  into the f32 kernel path (x64 is disabled: they quietly downcast, or
+  upcast whole intermediates when enabled).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .findings import Finding
+from .framework import CheckConfig, Checker, SourceFile, register
+
+__all__ = ["JitHygieneChecker"]
+
+_CAST_BUILTINS = ("float", "int", "bool")
+_NP_NAMES = ("np", "numpy")
+
+
+def _func_name(call: ast.Call) -> Optional[str]:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def _first_arg_name(call: ast.Call) -> Optional[str]:
+    if call.args and isinstance(call.args[0], ast.Name):
+        return call.args[0].id
+    return None
+
+
+def _str_tuple(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    if isinstance(node, (ast.Tuple, ast.List)) and all(
+        isinstance(e, ast.Constant) and isinstance(e.value, str) for e in node.elts
+    ):
+        return tuple(e.value for e in node.elts)
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    return None
+
+
+# attribute reads that are static under tracing: using them never
+# concretizes the traced value, so they don't propagate taint
+_STATIC_ATTRS = ("shape", "ndim", "dtype", "size", "sharding")
+
+
+def _mentions(node: ast.AST, names: Set[str]) -> bool:
+    """True when ``node`` references a tainted name through a non-static
+    path (``x.shape[0]`` is static metadata, not the traced value)."""
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, ast.Name) and n.id in names:
+            return True
+        if isinstance(n, ast.Attribute) and n.attr in _STATIC_ATTRS:
+            continue
+        stack.extend(ast.iter_child_nodes(n))
+    return False
+
+
+def _is_noneness_test(node: ast.AST) -> bool:
+    """True for tests that only check identity-with-None (not traced)."""
+    if isinstance(node, ast.BoolOp):
+        return all(_is_noneness_test(v) for v in node.values)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.Not):
+        return _is_noneness_test(node.operand)
+    if isinstance(node, ast.Compare):
+        return all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops)
+    return False
+
+
+class _JitSite:
+    """One function dispatched on device, plus how it was jitted."""
+
+    def __init__(self, fn: ast.FunctionDef, static: Tuple[str, ...], kind: str):
+        self.fn = fn
+        self.static = static
+        self.kind = kind  # 'jit' | 'pallas'
+
+
+def _collect_sites(sf: SourceFile) -> Tuple[List[_JitSite], List[ast.Call]]:
+    """Find jitted/kernel functions defined in this module and every
+    ``jax.jit(...)`` call (for the donate rule)."""
+    defs: Dict[str, ast.FunctionDef] = {
+        n.name: n for n in ast.walk(sf.tree) if isinstance(n, ast.FunctionDef)
+    }
+    # simple string-tuple assignments anywhere in the module, so
+    # ``static_argnames=_static`` resolves through the local alias
+    str_tuples: Dict[str, Tuple[str, ...]] = {}
+    for n in ast.walk(sf.tree):
+        if isinstance(n, ast.Assign) and len(n.targets) == 1:
+            t = n.targets[0]
+            v = _str_tuple(n.value)
+            if isinstance(t, ast.Name) and v is not None:
+                str_tuples[t.id] = v
+
+    jit_calls: List[ast.Call] = []
+    sites: Dict[str, _JitSite] = {}
+    for n in ast.walk(sf.tree):
+        if not isinstance(n, ast.Call):
+            continue
+        fname = _func_name(n)
+        if fname == "jit":
+            jit_calls.append(n)
+            target = _first_arg_name(n)
+            if target in defs:
+                static: Tuple[str, ...] = ()
+                for kw in n.keywords:
+                    if kw.arg == "static_argnames":
+                        static = _str_tuple(kw.value) or str_tuples.get(
+                            getattr(kw.value, "id", ""), ()
+                        )
+                prev = sites.get(target)
+                merged = static if prev is None else tuple(
+                    dict.fromkeys(prev.static + static)
+                )
+                sites[target] = _JitSite(defs[target], merged, "jit")
+        elif fname == "pallas_call":
+            target = _first_arg_name(n)
+            if target in defs:
+                sites[target] = _JitSite(defs[target], (), "pallas")
+    # decorator forms: @jax.jit / @jit / @partial(jax.jit, ...)
+    for name, fn in defs.items():
+        for dec in fn.decorator_list:
+            dn = None
+            static: Tuple[str, ...] = ()
+            if isinstance(dec, (ast.Name, ast.Attribute)):
+                dn = dec.id if isinstance(dec, ast.Name) else dec.attr
+            elif isinstance(dec, ast.Call):
+                dn = _func_name(dec)
+                if dn == "partial":
+                    inner = dec.args[0] if dec.args else None
+                    dn = (
+                        _func_name(ast.Call(func=inner, args=[], keywords=[]))
+                        if isinstance(inner, (ast.Name, ast.Attribute))
+                        else None
+                    )
+                    for kw in dec.keywords:
+                        if kw.arg == "static_argnames":
+                            static = _str_tuple(kw.value) or ()
+            if dn == "jit":
+                sites[name] = _JitSite(fn, static, "jit")
+    return list(sites.values()), jit_calls
+
+
+def _taint(fn: ast.FunctionDef, static: Sequence[str]) -> Set[str]:
+    """Names (conservatively) carrying traced values inside ``fn``."""
+    args = fn.args
+    params = [
+        a.arg
+        for a in (
+            args.posonlyargs + args.args + args.kwonlyargs
+            + ([args.vararg] if args.vararg else [])
+            + ([args.kwarg] if args.kwarg else [])
+        )
+    ]
+    tainted = {p for p in params if p not in static}
+    # forward-propagate through assignments until fixpoint (loop-carried
+    # names converge in <= depth-of-nesting passes; cap defensively)
+    for _ in range(10):
+        changed = False
+        for n in ast.walk(fn):
+            if isinstance(n, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                value = n.value
+                if value is None or not _mentions(value, tainted):
+                    continue
+                targets = (
+                    n.targets if isinstance(n, ast.Assign) else [n.target]
+                )
+                for t in targets:
+                    for leaf in ast.walk(t):
+                        if isinstance(leaf, ast.Name) and leaf.id not in tainted:
+                            tainted.add(leaf.id)
+                            changed = True
+        if not changed:
+            break
+    return tainted
+
+
+@register
+class JitHygieneChecker(Checker):
+    name = "jit"
+    rules = ("jit-host-sync", "jit-aot-bypass", "jit-donate", "jit-f64")
+
+    def check_file(
+        self, sf: SourceFile, config: CheckConfig
+    ) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        sites, jit_calls = _collect_sites(sf)
+
+        for site in sites:
+            tainted = _taint(site.fn, site.static)
+            where = f"{site.kind} function '{site.fn.name}'"
+            for n in ast.walk(site.fn):
+                if isinstance(n, ast.Call):
+                    fname = _func_name(n)
+                    base = n.func.value if isinstance(n.func, ast.Attribute) else None
+                    if (
+                        fname == "item"
+                        and base is not None
+                        and _mentions(base, tainted)
+                    ):
+                        findings.append(sf.finding(
+                            n, "jit-host-sync",
+                            f".item() on a traced value inside {where} "
+                            "forces a device sync per trace",
+                            checker="jit",
+                        ))
+                    elif (
+                        isinstance(n.func, ast.Name)
+                        and n.func.id in _CAST_BUILTINS
+                        and any(_mentions(a, tainted) for a in n.args)
+                    ):
+                        findings.append(sf.finding(
+                            n, "jit-host-sync",
+                            f"{n.func.id}() on a traced value inside {where} "
+                            "concretizes the tracer (TracerConversionError "
+                            "or silent host sync)",
+                            checker="jit",
+                        ))
+                    elif (
+                        isinstance(n.func, ast.Attribute)
+                        and isinstance(base, ast.Name)
+                        and base.id in _NP_NAMES
+                        and (
+                            any(_mentions(a, tainted) for a in n.args)
+                            or any(
+                                kw.value is not None
+                                and _mentions(kw.value, tainted)
+                                for kw in n.keywords
+                            )
+                        )
+                    ):
+                        findings.append(sf.finding(
+                            n, "jit-host-sync",
+                            f"np.{n.func.attr}(...) on a traced value inside "
+                            f"{where} materializes the array on host; use "
+                            "jnp/lax",
+                            checker="jit",
+                        ))
+                elif isinstance(n, (ast.If, ast.While)):
+                    if _mentions(n.test, tainted) and not _is_noneness_test(n.test):
+                        findings.append(sf.finding(
+                            n.test, "jit-host-sync",
+                            f"branching on a traced value inside {where}; "
+                            "use lax.cond/jnp.where (or mark the argument "
+                            "static)",
+                            checker="jit",
+                        ))
+                if (
+                    isinstance(n, ast.Attribute)
+                    and n.attr == "float64"
+                    and isinstance(n.value, ast.Name)
+                    and n.value.id in ("np", "numpy", "jnp")
+                ) or (
+                    isinstance(n, ast.Constant) and n.value == "float64"
+                ):
+                    findings.append(sf.finding(
+                        n, "jit-f64",
+                        f"float64 dtype inside {where} leaks f64 into the "
+                        "f32 kernel path (accumulate in f64 on host, after "
+                        "device_get)",
+                        checker="jit",
+                    ))
+
+        # .lower(...).compile() outside the AotDispatchCache build convention
+        allowed_file = sf.rel.replace("\\", "/").endswith("repro/core/aot.py")
+        if not allowed_file:
+            # ast.walk is breadth-first, so nested defs overwrite their
+            # enclosing def's claim — the map ends up innermost-wins
+            enclosing: Dict[int, str] = {}
+            for fn in ast.walk(sf.tree):
+                if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    for n in ast.walk(fn):
+                        enclosing[id(n)] = fn.name
+            for n in ast.walk(sf.tree):
+                if (
+                    isinstance(n, ast.Call)
+                    and isinstance(n.func, ast.Attribute)
+                    and n.func.attr == "compile"
+                    and isinstance(n.func.value, ast.Call)
+                    and _func_name(n.func.value) == "lower"
+                    and enclosing.get(id(n)) != "build"
+                ):
+                    findings.append(sf.finding(
+                        n, "jit-aot-bypass",
+                        ".lower().compile() outside an AotDispatchCache "
+                        "'build' thunk — AOT executables bypass jit's cache, "
+                        "so this site recompiles per call site; route "
+                        "through AotDispatchCache.get",
+                        checker="jit",
+                    ))
+
+        # donate-required pipeline entry points
+        for call in jit_calls:
+            target = _first_arg_name(call)
+            if target in config.donate_required and not any(
+                kw.arg == "donate_argnums" for kw in call.keywords
+            ):
+                findings.append(sf.finding(
+                    call, "jit-donate",
+                    f"jit({target}) without donate_argnums: its staging "
+                    "planes are ring-buffered for donation; not donating "
+                    "doubles peak device memory per dispatch",
+                    checker="jit",
+                ))
+        return findings

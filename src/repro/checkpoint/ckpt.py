@@ -23,7 +23,6 @@ import shutil
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import msgpack
 import numpy as np
 

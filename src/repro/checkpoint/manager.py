@@ -18,7 +18,6 @@ Designed for the 1000+-node posture even though this build runs 1 host:
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional
 
 from . import ckpt

@@ -25,16 +25,6 @@ from .attach import AttachedProgram, CXLMemSim, SimReport
 from .cache import DeviceCacheConfig, DeviceCacheModel
 from .coherency import CoherencyConfig, CoherencyModel
 from .engine import AnalysisEngine, EngineHandle
-from .fabric import FabricReport, FabricSession, HostClock, Tenant
-from .fleet import (
-    FleetPoint,
-    FleetReport,
-    FleetSim,
-    TenantPlacement,
-    TenantSpec,
-    model_zoo_tenant,
-    synthetic_tenant,
-)
 from .events import (
     CACHELINE_BYTES,
     PAGE_BYTES,
@@ -46,6 +36,16 @@ from .events import (
     merge_host_traces,
     split_by_host,
     synthetic_trace,
+)
+from .fabric import FabricReport, FabricSession, HostClock, Tenant
+from .fleet import (
+    FleetPoint,
+    FleetReport,
+    FleetSim,
+    TenantPlacement,
+    TenantSpec,
+    model_zoo_tenant,
+    synthetic_tenant,
 )
 from .migration import LocalBudget, MigrationConfig, MigrationSimulator
 from .policy import (

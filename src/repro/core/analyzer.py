@@ -69,7 +69,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

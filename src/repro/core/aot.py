@@ -30,6 +30,7 @@ compilation cache so executables survive process restarts.
 from __future__ import annotations
 
 import threading
+import weakref
 from typing import Any, Callable, Dict, Hashable, Tuple
 
 import jax
@@ -45,11 +46,25 @@ class AotDispatchCache:
     stops growing), ``hits`` counts lookups served without one.
     """
 
-    def __init__(self):
+    # every live cache, so RecompileSanitizer can snapshot/diff the
+    # process-wide lowering count without threading a handle everywhere
+    _instances: "weakref.WeakSet[AotDispatchCache]" = weakref.WeakSet()
+    _instances_lock = threading.Lock()
+
+    def __init__(self) -> None:
         self._lock = threading.Lock()
         self._cache: Dict[Hashable, Any] = {}
         self.lowerings = 0
         self.hits = 0
+        with AotDispatchCache._instances_lock:
+            AotDispatchCache._instances.add(self)
+
+    @classmethod
+    def total_lowerings(cls) -> int:
+        """Sum of ``lowerings`` across every live cache (sanitizer probe)."""
+        with cls._instances_lock:
+            caches = list(cls._instances)
+        return sum(c.lowerings for c in caches)
 
     def __len__(self) -> int:
         return len(self._cache)

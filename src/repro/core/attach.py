@@ -60,6 +60,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from ..analysis.annotations import guarded_by
 from .analyzer import DelayBreakdown, EpochAnalyzer, FineGrainedSimulator, analyze_any
 from .cache import DeviceCacheConfig, DeviceCacheModel
 from .coherency import CoherencyModel
@@ -212,6 +213,10 @@ class CXLMemSim:
 
 
 class AttachedProgram(EngineClient):
+    # the report is folded from the engine's dispatcher thread while the
+    # submitting thread accumulates native clocks — every touch locks
+    _simlint_guards = guarded_by("_report_lock", "_report")
+
     def __init__(
         self,
         sim: CXLMemSim,
@@ -262,7 +267,7 @@ class AttachedProgram(EngineClient):
         (``flush``/``close``/context-manager semantics come from
         :class:`~repro.core.engine.EngineClient`)."""
         self.flush()
-        return self._report
+        return self._report  # simlint: ignore[lock-discipline] -- post-flush read: no in-flight fold can race the caller's view
 
     # ------------------------------------------------------------------ #
 
@@ -409,11 +414,12 @@ class AttachedProgram(EngineClient):
                 # the paper's delay injection: the host program observes the
                 # simulated-topology execution speed
                 time.sleep(delay_ns * 1e-9)
-                self._report.injected_sleep_s += delay_ns * 1e-9
+                with self._report_lock:
+                    self._report.injected_sleep_s += delay_ns * 1e-9
         return out
 
     def run(self, n_steps: int, *args, **kwargs) -> SimReport:
         for _ in range(n_steps):
             self.step(*args, **kwargs)
         self.flush()
-        return self._report
+        return self._report  # simlint: ignore[lock-discipline] -- post-flush read: no in-flight fold can race the caller's view

@@ -37,7 +37,7 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
-from .events import CACHELINE_BYTES, MemEvents, RegionMap, concat_events
+from .events import MemEvents, RegionMap, concat_events
 
 __all__ = ["CoherencyConfig", "CoherencyModel"]
 
@@ -225,12 +225,16 @@ class CoherencyModel:
         scale = n_bi / emit
         src_idx = np.nonzero(writes)[0]
         pick = src_idx[np.linspace(0, len(src_idx) - 1, emit).astype(np.int64)]
+        # like _bi_for: subsampling scales bytes AND statistical multiplicity,
+        # so both byte-proportional (bandwidth) and weight-proportional
+        # (latency) charges stay unbiased under the event cap
         bi = MemEvents(
             t_ns=trace.t_ns[pick],
             pool=trace.pool[pick],
             bytes_=np.full((emit,), self.cfg.bi_message_bytes * scale),
             is_write=np.ones((emit,), bool),
             region=trace.region[pick],
+            weight=np.full((emit,), scale),
             host=trace.host[pick],
         )
         # coherency-miss latency: reads of shared regions that follow a write

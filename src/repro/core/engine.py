@@ -56,6 +56,7 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis.annotations import guarded_by, single_threaded
 from .analyzer import DelayBreakdown, EpochAnalyzer, PendingBatch, analyze_any
 from .events import EventStager, MemEvents
 
@@ -156,6 +157,19 @@ class EngineHandle:
     """One session's port into the engine; created by
     :meth:`AnalysisEngine.register`.  Not constructed directly."""
 
+    # handle state is shared between the submitting thread and the
+    # dispatcher; everything mutable rides under the engine's one lock
+    _simlint_guards = guarded_by(
+        "_cv",
+        "_inflight",
+        "_error",
+        "_closed",
+        "dropped_batches",
+        "dropped_epochs",
+        "_pending",
+        "_broken",
+    )
+
     def __init__(
         self,
         engine: "AnalysisEngine",
@@ -233,7 +247,9 @@ class EngineHandle:
         dispatcher thread — stays up for other sessions; closing a handle
         only forbids further submissions on it."""
         try:
-            if not self._closed:
+            with self.engine._cv:
+                closed = self._closed
+            if not closed:
                 self.flush()
         finally:
             with self.engine._cv:
@@ -274,6 +290,11 @@ class EngineClient:
     object with ``dropped_batches`` / ``dropped_epochs`` fields)."""
 
     _handle: Optional[EngineHandle] = None
+    # the report belongs to the session's lock; the handle's drop counters
+    # belong to the engine's — _sync_dropped bridges them (never nested)
+    _simlint_guards = guarded_by("_report_lock", "_report") | guarded_by(
+        "_cv", "_handle.dropped_batches", "_handle.dropped_epochs"
+    )
 
     def flush(self) -> None:
         """Block until every submitted batch has been analyzed and folded.
@@ -300,9 +321,15 @@ class EngineClient:
             self._sync_dropped()
 
     def _sync_dropped(self) -> None:
+        # the drop counters are dispatcher-written under the *engine's*
+        # lock; snapshot them there, then publish under the report lock
+        # (two disjoint critical sections — no nesting, no lock-order edge)
+        with self._handle.engine._cv:
+            dropped_batches = self._handle.dropped_batches
+            dropped_epochs = self._handle.dropped_epochs
         with self._report_lock:
-            self._report.dropped_batches = self._handle.dropped_batches
-            self._report.dropped_epochs = self._handle.dropped_epochs
+            self._report.dropped_batches = dropped_batches
+            self._report.dropped_epochs = dropped_epochs
 
     def __enter__(self):
         return self
@@ -315,6 +342,20 @@ class AnalysisEngine:
     """One dispatcher thread serving any number of attached sessions; see
     the module docstring.  ``coalesce=False`` disables cross-session
     stacking (every batch dispatches solo) — a debugging/bisection knob."""
+
+    _simlint_guards = guarded_by(
+        "_cv",
+        "_pending",
+        "_thread",
+        "_closed",
+        "_broken",
+        "_active",
+        "_stagers",
+        "dispatches",
+        "coalesced_dispatches",
+        "max_coalesced_sessions",
+        "_inflight",
+    ) | guarded_by("_default_lock", "_default")
 
     def __init__(
         self,
@@ -354,11 +395,10 @@ class AnalysisEngine:
         the process (already-registered handles keep raising; new
         sessions get a fresh engine)."""
         with cls._default_lock:
-            if (
-                cls._default is None
-                or cls._default._closed
-                or cls._default._broken
-            ):
+            d = cls._default
+            # reading another engine's _closed/_broken without ITS _cv is a
+            # benign race: a stale value only defers replacement by one call
+            if d is None or d._closed or d._broken:  # simlint: ignore[lock-discipline] -- benign race: stale _closed/_broken only delays replacing the default engine one call
                 cls._default = cls()
             return cls._default
 
@@ -412,6 +452,8 @@ class AnalysisEngine:
             )
             self._thread.start()
 
+    @single_threaded("dispatcher-thread only: called from _launch, and the "
+                     "engine runs exactly one dispatcher")
     def _stager_for(self, analyzer) -> Optional[EventStager]:
         if not isinstance(analyzer, EpochAnalyzer):
             return None

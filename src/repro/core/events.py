@@ -21,7 +21,7 @@ host-side in float64.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -71,7 +71,7 @@ class MemEvents:
     weight: np.ndarray = None  # type: ignore[assignment]
     host: np.ndarray = None  # type: ignore[assignment]
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.weight is None:
             object.__setattr__(self, "weight", np.ones((len(self.t_ns),), np.float64))
         if self.host is None:
@@ -256,7 +256,7 @@ class EventStager:
 
     _FIELDS = ("t", "pool", "bytes", "weight", "host", "valid")
 
-    def __init__(self, time_dtype=np.float32, slots: int = 1):
+    def __init__(self, time_dtype: object = np.float32, slots: int = 1) -> None:
         self.time_dtype = np.dtype(time_dtype)
         # ``slots`` > 1 turns each bucket's buffer set into a ring: every
         # stage() call rotates to the next slot before filling, so a caller
@@ -498,7 +498,7 @@ class RegionMap:
     Placement policies (:mod:`repro.core.policy`) mutate ``Region.pool``.
     """
 
-    def __init__(self):
+    def __init__(self) -> None:
         self._regions: List[Region] = []
         self._by_name: Dict[str, Region] = {}
 
@@ -521,7 +521,7 @@ class RegionMap:
     def __contains__(self, name: str) -> bool:
         return name in self._by_name
 
-    def __iter__(self):
+    def __iter__(self) -> Iterator[Region]:
         return iter(self._regions)
 
     def __len__(self) -> int:

@@ -65,10 +65,11 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from ..analysis.annotations import guarded_by
 from .analyzer import DelayBreakdown, EpochAnalyzer
-from .engine import AnalysisEngine, EngineClient, EngineHandle, fold_dispatch_stats
 from .cache import DeviceCacheConfig, DeviceCacheModel
 from .coherency import CoherencyConfig, CoherencyModel
+from .engine import AnalysisEngine, EngineClient, EngineHandle, fold_dispatch_stats
 from .events import MemEvents, RegionMap, concat_events
 from .migration import LocalBudget, MigrationConfig, MigrationSimulator
 from .policy import PlacementPolicy
@@ -207,6 +208,10 @@ class FabricSession(EngineClient):
     host-count independent.
     """
 
+    # round folds arrive from the engine's dispatcher thread while the
+    # round-driving thread accumulates native clocks — every touch locks
+    _simlint_guards = guarded_by("_report_lock", "_report")
+
     def __init__(
         self,
         topology: Topology,
@@ -325,7 +330,7 @@ class FabricSession(EngineClient):
         (``flush``/``close``/context-manager semantics come from
         :class:`~repro.core.engine.EngineClient`)."""
         self.flush()
-        return self._report
+        return self._report  # simlint: ignore[lock-discipline] -- post-flush read: no in-flight fold can race the caller's view
 
     # ------------------------------------------------------------------ #
 

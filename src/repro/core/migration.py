@@ -45,7 +45,7 @@ from typing import List, Optional, Tuple, Union
 
 import numpy as np
 
-from .events import CACHELINE_BYTES, PAGE_BYTES, MemEvents, RegionMap, concat_events
+from .events import PAGE_BYTES, MemEvents, RegionMap, concat_events
 from .topology import FlatTopology
 
 __all__ = ["LocalBudget", "MigrationConfig", "MigrationSimulator"]

@@ -20,9 +20,8 @@ how the paper's technique and the roofline engine share one analyzer.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict
 
 from .tracer import HardwareModel, TPU_V5E
 

@@ -52,8 +52,8 @@ from .analyzer import (
     plan_cascade,
 )
 from .cache import DeviceCacheConfig, DeviceCacheModel
-from .policy import PlacementPolicy, RegionArrays, assign_batch, bytes_per_pool_batch
 from .events import RegionMap
+from .policy import PlacementPolicy, RegionArrays, assign_batch, bytes_per_pool_batch
 from .topology import Topology, TopologyOverride, flatten_stack
 from .tracer import (
     HardwareModel,

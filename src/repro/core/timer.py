@@ -15,7 +15,7 @@ natural epoch boundaries are dispatch points:
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List
+from typing import List
 
 import numpy as np
 

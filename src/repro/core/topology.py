@@ -87,7 +87,7 @@ class Topology:
         local_dram_latency_ns: float = 88.9,  # paper's measured platform latency
         n_hosts: int = 1,
         host_ports: Optional[Mapping[int, Sequence[str]]] = None,
-    ):
+    ) -> None:
         self.pools: List[Pool] = list(pools)
         self.switches: List[Switch] = list(switches)
         self.rc_latency_ns = float(rc_latency_ns)

@@ -41,11 +41,11 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from .events import MemEvents, RegionMap, concat_events
+from .events import MemEvents, RegionMap
 
 __all__ = [
     "Access",
@@ -249,7 +249,9 @@ def skeleton_to_events(
     for e in range(skeleton.n_epochs):
         lo, hi = int(skeleton.epoch_ptr[e]), int(skeleton.epoch_ptr[e + 1])
         out.append(
-            MemEvents(
+            # skeletons carry no weight/host columns: synthesis is exact
+            # (weight 1) and the host tag is applied downstream by with_host
+            MemEvents(  # simlint: ignore[event-columns] -- skeleton build: default weight/host are the correct semantics here
                 t_ns=skeleton.t_ns[lo:hi],
                 pool=pool[lo:hi],
                 bytes_=skeleton.bytes_[lo:hi],

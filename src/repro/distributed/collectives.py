@@ -12,7 +12,6 @@ from __future__ import annotations
 from typing import Any, List
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 __all__ = ["constrain", "bucketed", "psum_scatter_tree"]

@@ -80,7 +80,7 @@ def attention(
     q: jnp.ndarray,
     k: jnp.ndarray,
     v: jnp.ndarray,
-    q_offset=0,
+    q_offset: int = 0,
     causal: bool = True,
     scale: Optional[float] = None,
     impl: Optional[str] = None,

@@ -30,7 +30,6 @@ import traceback
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs as cfgs
 from repro.core.roofline import collective_bytes_from_hlo, roofline_terms

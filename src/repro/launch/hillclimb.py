@@ -26,7 +26,7 @@ os.environ["XLA_FLAGS"] = (
 import argparse
 import dataclasses
 import json
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax.numpy as jnp
 

@@ -2,11 +2,9 @@
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import Model, ModelConfig
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update

@@ -25,8 +25,6 @@ from repro.core import (
     CXLMemSim,
     ClassMapPolicy,
     EpochSchedule,
-    LocalOnlyPolicy,
-    RegionMap,
     two_tier_topology,
 )
 from repro.data.pipeline import SyntheticPipeline

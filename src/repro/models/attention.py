@@ -19,7 +19,6 @@ RoPE variants (per assigned architectures):
 
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -14,12 +14,13 @@ the ``long_500k`` shape runs on this family.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+
 from .layers import init_linear, rms_norm
 
 __all__ = [

@@ -12,7 +12,7 @@ returned so the trainer can add ``aux_weight * aux``.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,6 @@ Group composition per family (cfg.group_spec()):
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

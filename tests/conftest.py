@@ -21,6 +21,30 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(autouse=True)
+def _simlint_sanitizers(request):
+    """Opt-in sanitizer harness: ``SIMLINT_SANITIZE=1 pytest ...`` runs
+    every test under the lock-order sanitizer (raising on cycles) and the
+    recompile sanitizer in record-only mode (first-compile-per-shape is
+    legitimate inside a test; the steady-state assertions live in
+    tests/test_simlint.py).  Off by default: wrapping lock creation has
+    measurable overhead and the CI lint job runs the sanitized smoke on
+    tests/test_engine.py explicitly."""
+    if os.environ.get("SIMLINT_SANITIZE") != "1":
+        yield
+        return
+    if request.node.get_closest_marker("no_sanitize") is not None:
+        # tests that patch threading or assert sanitizer behavior manage
+        # their own scopes
+        yield
+        return
+    from repro.analysis.sanitize import LockOrderSanitizer, RecompileSanitizer
+
+    with LockOrderSanitizer():
+        with RecompileSanitizer(record_only=True):
+            yield
+
+
 @pytest.fixture(scope="session")
 def data_mesh():
     """A ('data',) mesh over every (virtual) device — the sharded-dispatch

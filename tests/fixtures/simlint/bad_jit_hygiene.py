@@ -1,0 +1,41 @@
+"""Seeded violations: all four jit-hygiene rules in one file.
+
+jit-donate (pipeline entry point jitted without donation), jit-host-sync
+(cast / np.* / branch / .item() on traced values), jit-f64 (f64 dtype in
+the kernel path), jit-aot-bypass (.lower().compile() outside a 'build'
+thunk).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _analyze_pipeline_jax(planes, weights):
+    return jnp.sum(planes * weights)
+
+
+# BUG jit-donate: the staging planes are ring-buffered for donation
+analyze = jax.jit(_analyze_pipeline_jax)
+
+
+def kernel(x, scale):
+    # BUG jit-host-sync: float() concretizes the tracer
+    s = float(scale)
+    # BUG jit-host-sync: np.* materializes the traced array on host
+    m = np.mean(x)
+    # BUG jit-host-sync: branching on a traced value
+    if m > 0:
+        x = x - m
+    # BUG jit-host-sync: .item() forces a device sync per trace
+    peak = x.max().item()
+    # BUG jit-f64: f64 leaks into the f32 kernel path
+    acc = jnp.zeros((4,), dtype=jnp.float64)
+    return x * s + acc.sum() + peak
+
+
+kernel_jit = jax.jit(kernel)
+
+
+def compile_now(fn, x):
+    # BUG jit-aot-bypass: AOT compile outside AotDispatchCache's build thunk
+    return jax.jit(fn).lower(x).compile()

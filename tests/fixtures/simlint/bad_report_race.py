@@ -1,0 +1,34 @@
+"""Seeded violation: the PR-5 report race, reconstructed.
+
+An async dispatcher folds per-epoch stats into a shared report while the
+stepping thread reads running-statistic fields without the lock.  The
+lock-discipline checker must flag every unlocked access — including the
+closure built under the lock that escapes to run on another thread.
+"""
+import threading
+
+from repro.analysis.annotations import guarded_by
+
+
+class RacyClient:
+    _simlint_guards = guarded_by("_report_lock", "_report", "_folds")
+
+    def __init__(self):
+        self._report_lock = threading.Lock()
+        self._report = {"epochs": 0}
+        self._folds = 0
+
+    def fold(self, epochs):
+        # BUG: dispatcher-thread write without the report lock
+        self._report["epochs"] += epochs
+        self._folds += 1
+
+    def snapshot(self):
+        # BUG: stepping-thread read while folds are in flight
+        return dict(self._report)
+
+    def escape(self):
+        with self._report_lock:
+            # BUG: the callback is built under the lock but runs later,
+            # on the dispatcher thread, without it
+            return lambda: self._report["epochs"]

@@ -1,0 +1,22 @@
+"""Seeded violation: the PR-2 weight/host drop, reconstructed.
+
+A slice_by_quantum-style rebuild gathers five columns of an existing trace
+and lets ``weight``/``host`` silently reset to their defaults (exact-weight
+1, host 0) — the event-columns checker must flag both the constructor form
+and the ``MemEvents.build`` form.
+"""
+from repro.core.events import MemEvents
+
+
+def slice_by_quantum(ev, lo, hi):
+    pick = (ev.t_ns >= lo) & (ev.t_ns < hi)
+    # BUG: gathers five columns, resets PEBS multiplicity and host tags
+    return MemEvents(
+        ev.t_ns[pick], ev.pool[pick], ev.bytes_[pick], ev.is_write[pick],
+        ev.region[pick],
+    )
+
+
+def halve_bytes(ev):
+    # BUG: build() cannot carry weight/host at all
+    return MemEvents.build(ev.t_ns, ev.pool, ev.bytes_ * 0.5, ev.is_write)

@@ -1,0 +1,19 @@
+"""Seeded violation: summary()/key-lock-test drift, both directions.
+
+``summary`` emits ``p99_ns`` (never locked by the test) and the test locks
+``dropped_epochs`` (never emitted) — the summary-contract checker must
+report both sides of the mismatch.
+"""
+
+
+class SimReport:
+    def __init__(self):
+        self.epochs = 0
+        self.latency_ns = 0.0
+
+    def summary(self):
+        return {
+            "epochs": self.epochs,
+            "latency_ns": self.latency_ns,
+            "p99_ns": 0.0,
+        }

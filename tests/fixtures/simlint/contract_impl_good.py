@@ -1,0 +1,13 @@
+"""Clean contract pair: summary keys exactly match the key-lock test."""
+
+
+class SimReport:
+    def __init__(self):
+        self.epochs = 0
+        self.latency_ns = 0.0
+
+    def summary(self):
+        return {
+            "epochs": self.epochs,
+            "latency_ns": self.latency_ns,
+        }

@@ -1,0 +1,7 @@
+"""Key-lock test side of the drifted contract pair (see contract_impl_bad)."""
+from contract_impl_bad import SimReport
+
+
+def test_sim_report_summary_keys_locked():
+    base = {"epochs", "latency_ns", "dropped_epochs"}
+    assert set(SimReport().summary()) == base

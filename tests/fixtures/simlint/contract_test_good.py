@@ -1,0 +1,7 @@
+"""Key-lock test side of the matching contract pair (contract_impl_good)."""
+from contract_impl_good import SimReport
+
+
+def test_sim_report_summary_keys_locked():
+    base = {"epochs", "latency_ns"}
+    assert set(SimReport().summary()) == base

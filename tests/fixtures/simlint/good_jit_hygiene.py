@@ -1,0 +1,41 @@
+"""Clean counterpart of bad_jit_hygiene.py.
+
+Static arguments may branch; noneness tests on traced optionals are fine;
+``.shape`` reads are static metadata; AOT compiles live inside a 'build'
+thunk routed through AotDispatchCache; pipeline entry points donate.
+"""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aot import AotDispatchCache
+
+
+def _analyze_pipeline_jax(planes, weights):
+    return jnp.sum(planes * weights)
+
+
+analyze = jax.jit(_analyze_pipeline_jax, donate_argnums=(0,))
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def kernel(x, mode, bias=None):
+    if mode == "centered":  # static parameter: python branching is fine
+        x = x - jnp.mean(x)
+    if bias is not None:  # noneness test on a traced optional is not a sync
+        x = x + bias
+    n = float(x.shape[0])  # shape reads are static metadata
+    return x / n
+
+
+_cache = AotDispatchCache()
+
+
+def warm(fn, x):
+    def build():
+        # the sanctioned convention: AOT compile inside a 'build' thunk
+        return jax.jit(fn).lower(x).compile()
+
+    exe, _ = _cache.get(("k", x.shape), build)
+    return exe

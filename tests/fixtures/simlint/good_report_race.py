@@ -1,0 +1,33 @@
+"""Clean counterpart of bad_report_race.py: every guarded access is locked,
+plus one use of each sanctioned exemption (``*_locked`` convention and
+``@single_threaded``).  The lock-discipline checker must stay silent.
+"""
+import threading
+
+from repro.analysis.annotations import guarded_by, single_threaded
+
+
+class LockedClient:
+    _simlint_guards = guarded_by("_report_lock", "_report", "_folds")
+
+    def __init__(self):
+        self._report_lock = threading.Lock()
+        self._report = {"epochs": 0}
+        self._folds = 0
+
+    def fold(self, epochs):
+        with self._report_lock:
+            self._report["epochs"] += epochs
+            self._folds += 1
+
+    def snapshot(self):
+        with self._report_lock:
+            return dict(self._report)
+
+    def _fold_into_locked(self, epochs):
+        # caller-holds-the-lock convention
+        self._report["epochs"] += epochs
+
+    @single_threaded("called only from the single dispatcher thread")
+    def drain(self):
+        return self._folds

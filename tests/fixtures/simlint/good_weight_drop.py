@@ -1,0 +1,23 @@
+"""Clean counterpart of bad_weight_drop.py: the rebuild threads weight/host
+through, and fresh synthesis (no derived columns) keeps its exact-weight
+defaults.  The event-columns checker must stay silent on both.
+"""
+import numpy as np
+
+from repro.core.events import MemEvents
+
+
+def slice_by_quantum(ev, lo, hi):
+    pick = (ev.t_ns >= lo) & (ev.t_ns < hi)
+    return MemEvents(
+        ev.t_ns[pick], ev.pool[pick], ev.bytes_[pick], ev.is_write[pick],
+        ev.region[pick], weight=ev.weight[pick], host=ev.host[pick],
+    )
+
+
+def synthesize(n):
+    # fresh synthesis: defaults (weight 1, host 0) are the correct semantics
+    return MemEvents(
+        np.zeros(n), np.zeros(n, np.int32), np.full(n, 64.0),
+        np.zeros(n, bool), np.zeros(n, np.int32),
+    )

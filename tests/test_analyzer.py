@@ -13,7 +13,7 @@ from repro.core.analyzer import (
     serial_queue_ref,
 )
 from repro.core.events import MemEvents, synthetic_trace
-from repro.core.topology import Pool, Switch, Topology, figure1_topology, two_tier_topology
+from repro.core.topology import figure1_topology, two_tier_topology
 
 FLAT = figure1_topology().flatten()
 
@@ -120,7 +120,8 @@ def test_property_delays_nonnegative_and_monotone(n, seed, burst):
     a = analyze_ref(FLAT, ev)
     assert a.latency_ns >= 0 and a.congestion_ns >= 0 and a.bandwidth_ns >= 0
     # doubling every event's bytes can only increase bandwidth delay
-    ev2 = MemEvents(ev.t_ns, ev.pool, ev.bytes_ * 2, ev.is_write, ev.region)
+    ev2 = MemEvents(ev.t_ns, ev.pool, ev.bytes_ * 2, ev.is_write, ev.region,
+                    weight=ev.weight, host=ev.host)
     b = analyze_ref(FLAT, ev2)
     assert b.bandwidth_ns >= a.bandwidth_ns - 1e-9
     # latency delay is independent of bytes

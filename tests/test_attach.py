@@ -2,7 +2,6 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import (
@@ -17,7 +16,6 @@ from repro.core import (
     MigrationSimulator,
     Phase,
     RegionMap,
-    figure1_topology,
     local_only_topology,
     two_tier_topology,
 )

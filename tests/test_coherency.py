@@ -54,6 +54,20 @@ def test_epoch_traffic_subsampling_preserves_bytes():
     assert bi.total_bytes == pytest.approx(1000 * 3 * cfg.bi_message_bytes)
 
 
+def test_epoch_traffic_subsampling_preserves_weight():
+    """Regression (simlint event-columns): the capped BI rebuild must scale
+    statistical multiplicity like _bi_for does, not reset it to 1 — else
+    weight-proportional (latency-class) charges are biased under the cap."""
+    rm = _regions()
+    cfg = CoherencyConfig(n_hosts=4, shared_classes=("kvcache",), max_bi_events=16)
+    bi, _ = CoherencyModel(cfg, rm).epoch_traffic(_trace(1000, 0))
+    assert float(bi.weight.sum()) == pytest.approx(1000 * 3)
+    # uncapped path: one packet per sharer per write, exact weight 1 each
+    cfg = CoherencyConfig(n_hosts=4, shared_classes=("kvcache",))
+    bi, _ = CoherencyModel(cfg, rm).epoch_traffic(_trace(100, 0))
+    assert float(bi.weight.sum()) == pytest.approx(100 * 3)
+
+
 def test_epoch_traffic_single_host_noop():
     for n_hosts in (0, 1):
         model = CoherencyModel(
@@ -149,7 +163,7 @@ def test_fabric_traffic_weight_aware_bytes():
     model = CoherencyModel(cfg)
     tr = _trace(10, 0)
     tr = MemEvents(tr.t_ns, tr.pool, tr.bytes_, tr.is_write, tr.region,
-                   weight=np.full((tr.n,), 4.0))
+                   weight=np.full((tr.n,), 4.0), host=tr.host)
     bi, _ = model.fabric_traffic([tr, _trace(0, 5)], maps)
     assert bi[1].total_bytes == pytest.approx(10 * 4.0 * cfg.bi_message_bytes)
     # statistical multiplicity rides in weight too, so weight-proportional

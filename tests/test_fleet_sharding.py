@@ -17,7 +17,7 @@ import repro.configs as cfgs
 from repro.core.analyzer import DispatchStats, EpochAnalyzer
 from repro.core.engine import AnalysisEngine
 from repro.core.events import synthetic_trace
-from repro.core.fleet import FleetSim, TenantSpec, synthetic_tenant
+from repro.core.fleet import FleetSim, synthetic_tenant
 from repro.core.policy import ClassMapPolicy, InterleavePolicy
 from repro.core.scenario import Scenario, ScenarioSuite
 from repro.core.topology import TopologyOverride, figure1_topology, pooled_topology

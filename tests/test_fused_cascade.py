@@ -15,7 +15,7 @@ from repro.core.analyzer import (
     analyze_ref,
     plan_cascade,
 )
-from repro.core.events import EventStager, MemEvents, concat_events, synthetic_trace
+from repro.core.events import EventStager, MemEvents, synthetic_trace
 from repro.core.topology import Pool, Switch, Topology, figure1_topology
 from repro.kernels.congestion import congestion_cascade
 from repro.kernels.ref import merge_sorted_runs, serial_queue_cascade

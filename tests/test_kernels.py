@@ -5,11 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.congestion import congestion_scan
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_scan import ssd_scan
-from repro.kernels import ops
 
 
 # --------------------------------------------------------------------------- #

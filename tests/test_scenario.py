@@ -186,7 +186,7 @@ def legacy_synthesize(phases, regions, granularity_bytes=64.0,
             n_ev = int(min(max(np.ceil(b / granularity_bytes), 1), max_events_per_access))
             offs = (np.arange(n_ev, dtype=np.float64) + 0.5) / n_ev * dur
             base = 0.0 if epoch_mode == "layer" else cur
-            parts.append(MemEvents(
+            parts.append(MemEvents(  # simlint: ignore[event-columns] -- built from scenario spec fields, not an event trace; exact weight / host-0 is the reference semantics
                 t_ns=base + offs,
                 pool=np.full((n_ev,), r.pool, np.int32),
                 bytes_=np.full((n_ev,), b / n_ev, np.float64),

@@ -1,7 +1,6 @@
 """Sharding-rule tests on an abstract production-shaped mesh (no devices)."""
 
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 

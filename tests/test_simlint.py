@@ -1,0 +1,384 @@
+"""simlint end-to-end: every checker's true positives on the seeded-violation
+corpus (tests/fixtures/simlint), zero false positives on the clean
+counterparts, suppression semantics, the repo-wide strict gate, the CLI, and
+the runtime sanitizers.
+
+The sanitizer tests are marked ``no_sanitize``: they patch ``threading`` /
+toggle ``jax_log_compiles`` themselves and must not run nested inside the
+``SIMLINT_SANITIZE=1`` autouse harness.
+"""
+import json
+import os
+import subprocess
+import sys
+import threading
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import CheckConfig, run_checks
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "fixtures" / "simlint"
+
+
+def _check(*names, checkers=None, strict=False, config=None):
+    return run_checks(
+        [FIXTURES / n for n in names],
+        root=FIXTURES,
+        strict=strict,
+        checker_names=checkers,
+        config=config,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# lock-discipline
+# --------------------------------------------------------------------------- #
+
+
+def test_lock_checker_flags_report_race():
+    rep = _check("bad_report_race.py", checkers=["locks"])
+    rules = {f.rule for f in rep.findings}
+    assert rules == {"lock-discipline"}
+    # fold: _report + _folds, snapshot: _report, escape: closure _report
+    assert len(rep.findings) == 4
+    methods = {f.message.split("'")[5] for f in rep.findings}
+    assert methods == {"RacyClient.fold", "RacyClient.snapshot",
+                       "RacyClient.escape"}
+
+
+def test_lock_checker_flags_closure_escaping_the_lock():
+    """A callback built under the lock runs later without it — the lexical
+    checker must treat nested defs/lambdas as unlocked (the PR-5 shape)."""
+    rep = _check("bad_report_race.py", checkers=["locks"])
+    assert any("RacyClient.escape" in f.message for f in rep.findings)
+
+
+def test_lock_checker_clean_on_locked_variant():
+    rep = _check("good_report_race.py", checkers=["locks"])
+    assert rep.ok, [f.format() for f in rep.findings]
+
+
+# --------------------------------------------------------------------------- #
+# event-columns (the PR-2 weight/host drop)
+# --------------------------------------------------------------------------- #
+
+
+def test_contract_checker_flags_weight_drop():
+    rep = _check("bad_weight_drop.py", checkers=["contracts"])
+    assert {f.rule for f in rep.findings} == {"event-columns"}
+    assert len(rep.findings) == 2
+    msgs = sorted(f.message for f in rep.findings)
+    assert any("MemEvents.build" in m for m in msgs)
+    assert any("weight/host" in m for m in msgs)
+
+
+def test_contract_checker_clean_on_threaded_columns():
+    rep = _check("good_weight_drop.py", checkers=["contracts"])
+    assert rep.ok, [f.format() for f in rep.findings]
+
+
+# --------------------------------------------------------------------------- #
+# summary-contract
+# --------------------------------------------------------------------------- #
+
+
+def _contract_config(which):
+    return CheckConfig(summary_contracts=(
+        (f"contract_impl_{which}.py", "SimReport",
+         f"contract_test_{which}.py", "test_sim_report_summary_keys_locked"),
+    ))
+
+
+def test_summary_contract_drift_reported_both_ways():
+    rep = _check("contract_impl_bad.py", checkers=["contracts"],
+                 config=_contract_config("bad"))
+    drift = [f for f in rep.findings if f.rule == "summary-contract"]
+    assert len(drift) == 1
+    assert "p99_ns" in drift[0].message  # summary emits, test never locks
+    assert "dropped_epochs" in drift[0].message  # test locks, never emitted
+
+
+def test_summary_contract_clean_when_keys_match():
+    rep = _check("contract_impl_good.py", checkers=["contracts"],
+                 config=_contract_config("good"))
+    assert rep.ok, [f.format() for f in rep.findings]
+
+
+# --------------------------------------------------------------------------- #
+# jit-hygiene
+# --------------------------------------------------------------------------- #
+
+
+def test_jit_checker_flags_all_four_rules():
+    rep = _check("bad_jit_hygiene.py", checkers=["jit"])
+    rules = {f.rule for f in rep.findings}
+    assert rules == {"jit-host-sync", "jit-aot-bypass", "jit-donate",
+                     "jit-f64"}
+    # cast, np.*, branch, .item()
+    assert sum(f.rule == "jit-host-sync" for f in rep.findings) == 4
+
+
+def test_jit_checker_clean_on_hygienic_variant():
+    rep = _check("good_jit_hygiene.py", checkers=["jit"])
+    assert rep.ok, [f.format() for f in rep.findings]
+
+
+# --------------------------------------------------------------------------- #
+# framework: suppressions, parse errors
+# --------------------------------------------------------------------------- #
+
+_REBUILD = (
+    "from repro.core.events import MemEvents\n\n\n"
+    "def f(ev):\n"
+    "    return MemEvents(ev.t_ns, ev.pool, ev.bytes_, ev.is_write,"
+    " ev.region){}\n"
+)
+
+
+def test_justified_suppression_silences_and_passes_strict(tmp_path):
+    p = tmp_path / "snippet.py"
+    # the marker is concatenated so this test file's own source line does
+    # not register as a (then-unused) suppression in the repo-wide scan
+    p.write_text(_REBUILD.format(
+        "  # simlint" ": ignore[event-columns] -- fixture: defaults intended"))
+    rep = run_checks([p], root=tmp_path, strict=True)
+    assert rep.ok and len(rep.suppressed) == 1
+
+
+def test_bare_suppression_rejected_in_strict(tmp_path):
+    p = tmp_path / "snippet.py"
+    p.write_text(_REBUILD.format("  # simlint" ": ignore[event-columns]"))
+    rep = run_checks([p], root=tmp_path)
+    assert rep.ok  # non-strict: the suppression still silences the finding
+    rep = run_checks([p], root=tmp_path, strict=True)
+    assert [f.rule for f in rep.findings] == ["bare-suppression"]
+
+
+def test_unused_suppression_rejected_in_strict(tmp_path):
+    p = tmp_path / "snippet.py"
+    p.write_text("x = 1  # simlint" ": ignore[event-columns] -- stale\n")
+    rep = run_checks([p], root=tmp_path, strict=True)
+    assert [f.rule for f in rep.findings] == ["unused-suppression"]
+
+
+def test_parse_error_is_a_finding_not_a_crash(tmp_path):
+    p = tmp_path / "broken.py"
+    p.write_text("def f(:\n")
+    rep = run_checks([p], root=tmp_path)
+    assert [f.rule for f in rep.findings] == ["parse-error"]
+
+
+# --------------------------------------------------------------------------- #
+# the repo itself: strict gate + annotation regression locks
+# --------------------------------------------------------------------------- #
+
+
+def test_repo_wide_strict_gate_is_clean():
+    paths = [REPO / d for d in ("src/repro", "tests", "benchmarks", "examples")]
+    rep = run_checks([p for p in paths if p.exists()], root=REPO, strict=True)
+    assert rep.ok, "\n".join(f.format() for f in rep.findings)
+    assert rep.files_checked > 50
+    # the strict gate implies: every suppression justified and in use
+    assert all(s.justification for _, s in rep.suppressed)
+
+
+def test_concurrency_core_keeps_its_guard_annotations():
+    """Regression lock for the PR-5 fix class: the lock-discipline guards on
+    the concurrency core must stay declared (deleting them would silently
+    turn the checker off for exactly the files it was built for)."""
+    for rel in ("src/repro/core/engine.py", "src/repro/core/attach.py",
+                "src/repro/core/fabric.py"):
+        assert "_simlint_guards" in (REPO / rel).read_text(), rel
+
+
+def test_cli_strict_json_clean_on_repo():
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--strict", "--json"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=120,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    data = json.loads(out.stdout)
+    assert data["findings"] == []
+    assert data["files_checked"] > 30
+    assert all(s["justification"] for s in data["suppressed"])
+
+
+def test_cli_exits_nonzero_on_findings(tmp_path):
+    p = tmp_path / "snippet.py"
+    p.write_text(_REBUILD.format(""))
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--root", str(tmp_path),
+         str(p)],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=120,
+    )
+    assert out.returncode == 1, out.stdout + out.stderr
+    assert "event-columns" in out.stdout
+
+
+def test_cli_rejects_unknown_checker():
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--checkers", "nope"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=120,
+    )
+    assert out.returncode == 2
+    assert "unknown checkers" in out.stderr
+
+
+# --------------------------------------------------------------------------- #
+# LockOrderSanitizer
+# --------------------------------------------------------------------------- #
+
+
+def _inverted_order_program():
+    a = threading.Lock()
+    b = threading.Lock()
+    with a:
+        with b:
+            pass
+    with b:
+        with a:
+            pass
+
+
+@pytest.mark.no_sanitize
+def test_lock_order_cycle_detected():
+    from repro.analysis.sanitize import LockOrderError, LockOrderSanitizer
+
+    with pytest.raises(LockOrderError, match="lock-order cycle"):
+        with LockOrderSanitizer():
+            _inverted_order_program()
+
+
+@pytest.mark.no_sanitize
+def test_lock_order_record_only_reports_without_raising():
+    from repro.analysis.sanitize import LockOrderSanitizer
+
+    san = LockOrderSanitizer(record_only=True)
+    with san:
+        _inverted_order_program()
+    cycle = san.find_cycle()
+    assert cycle is not None
+    assert "lock-order cycle" in san.format_cycle(cycle)
+
+
+@pytest.mark.no_sanitize
+def test_lock_order_clean_on_consistent_nesting():
+    from repro.analysis.sanitize import LockOrderSanitizer
+
+    san = LockOrderSanitizer()
+    with san:  # same nesting twice: one edge, no cycle
+        a = threading.Lock()
+        b = threading.Lock()
+        for _ in range(2):
+            with a:
+                with b:
+                    pass
+    assert san.locks_created == 2
+    assert len(san.edges) == 1
+    assert san.find_cycle() is None
+
+
+@pytest.mark.no_sanitize
+def test_lock_order_sanitizer_restores_factories():
+    from repro.analysis.sanitize import LockOrderSanitizer
+
+    orig_lock, orig_rlock = threading.Lock, threading.RLock
+    with LockOrderSanitizer():
+        assert threading.Lock is not orig_lock
+    assert threading.Lock is orig_lock and threading.RLock is orig_rlock
+
+
+@pytest.mark.no_sanitize
+def test_lock_order_wrapped_condition_wait_notify():
+    """threading.Condition must keep working over wrapped locks (it relies
+    on _is_owned/_release_save/_acquire_restore), across real threads."""
+    from repro.analysis.sanitize import LockOrderSanitizer
+
+    with LockOrderSanitizer():
+        for lock in (threading.Lock(), threading.RLock(), None):
+            cv = threading.Condition(lock)
+            done = []
+
+            def worker():
+                with cv:
+                    done.append(1)
+                    cv.notify()
+
+            t = threading.Thread(target=worker)
+            with cv:
+                t.start()
+                assert cv.wait_for(lambda: done, timeout=10)
+            t.join()
+
+
+# --------------------------------------------------------------------------- #
+# RecompileSanitizer
+# --------------------------------------------------------------------------- #
+
+
+def _build_exe(shape=(8,)):
+    import jax
+    import jax.numpy as jnp
+
+    return jax.jit(lambda x: x * 2.0).lower(  # simlint: ignore[jit-aot-bypass] -- this IS the build thunk the tests hand to AotDispatchCache.get
+        jnp.ones(shape, jnp.float32)).compile()
+
+
+@pytest.mark.no_sanitize
+def test_recompile_sanitizer_steady_state_passes():
+    from repro.analysis.sanitize import RecompileSanitizer
+    from repro.core.aot import AotDispatchCache
+
+    cache = AotDispatchCache()
+    cache.warm("k", _build_exe)
+    with RecompileSanitizer() as san:
+        exe, hit = cache.get("k", _build_exe)
+        assert hit
+    assert san.aot_lowerings == 0
+
+
+@pytest.mark.no_sanitize
+def test_recompile_sanitizer_raises_on_cache_miss():
+    from repro.analysis.sanitize import RecompileError, RecompileSanitizer
+    from repro.core.aot import AotDispatchCache
+
+    cache = AotDispatchCache()
+    with pytest.raises(RecompileError, match="AOT lowering"):
+        with RecompileSanitizer():
+            cache.get("never-warmed", lambda: _build_exe((16,)))
+
+
+@pytest.mark.no_sanitize
+def test_recompile_sanitizer_budget_and_record_only():
+    from repro.analysis.sanitize import RecompileSanitizer
+    from repro.core.aot import AotDispatchCache
+
+    # both caches stay referenced: the registry is a WeakSet, so dropping
+    # one mid-scope would shrink the baseline under the sanitizer's feet
+    cache1 = AotDispatchCache()
+    with RecompileSanitizer(allowed_lowerings=1):
+        cache1.get("one-build-allowed", lambda: _build_exe((32,)))
+    san = RecompileSanitizer(record_only=True)
+    with san:
+        cache2 = AotDispatchCache()
+        cache2.get("recorded-miss", lambda: _build_exe((64,)))
+    assert san.aot_lowerings == 1
+
+
+@pytest.mark.no_sanitize
+def test_recompile_sanitizer_sees_jit_compiles():
+    import jax.numpy as jnp
+    import jax
+
+    from repro.analysis.sanitize import RecompileSanitizer
+
+    san = RecompileSanitizer(record_only=True)
+    with san:  # fresh function object + odd shape: a guaranteed real compile
+        jax.jit(lambda x: x * 3.0 - 1.0)(jnp.ones((13,), jnp.float32))
+    assert san.jit_compiles >= 1
+    assert any("Compiling" in e for e in san.compile_events)

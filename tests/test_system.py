@@ -25,7 +25,7 @@ from repro.core import (
     EpochSchedule,
     figure1_topology,
 )
-from repro.core.analyzer import EpochAnalyzer, FineGrainedSimulator, analyze_ref
+from repro.core.analyzer import FineGrainedSimulator, analyze_ref
 from repro.core.events import synthetic_trace
 from repro.launch.steps import make_train_step
 from repro.models import Model

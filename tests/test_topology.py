@@ -1,8 +1,6 @@
-import numpy as np
 import pytest
 
 from repro.core.topology import (
-    FlatTopology,
     Pool,
     Switch,
     Topology,

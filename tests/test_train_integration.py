@@ -1,7 +1,6 @@
 """Integration: real training loop — loss decreases, checkpoint resume works,
 simulator attaches, optimizer/compression compose."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
