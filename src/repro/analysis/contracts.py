@@ -8,11 +8,11 @@
 * ``event-columns``: a ``MemEvents(...)`` (or ``MemEvents.build(...)``)
   call whose arguments are *derived from existing trace columns* (slicing,
   gathering, arithmetic on ``<x>.t_ns``-style reads) is a trace rebuild —
-  it must pass ``weight=`` and ``host=`` explicitly, or the rebuilt trace
-  silently resets PEBS multiplicity to 1 and host to 0.  This is the
-  PR-2 ``slice_by_quantum`` bug, shipped twice.  Fresh-synthesis sites
-  (``np.full``/``np.zeros`` arguments) are not flagged: their defaults are
-  the correct semantics.
+  it must pass ``weight=``, ``host=`` and ``qos=`` explicitly, or the
+  rebuilt trace silently resets PEBS multiplicity to 1, host to 0 and the
+  QoS class to 0.  This is the PR-2 ``slice_by_quantum`` bug, shipped
+  twice.  Fresh-synthesis sites (``np.full``/``np.zeros`` arguments) are
+  not flagged: their defaults are the correct semantics.
 """
 
 from __future__ import annotations
@@ -26,9 +26,11 @@ from .framework import CheckConfig, Checker, SourceFile, register
 
 __all__ = ["ContractChecker"]
 
-COLUMNS = ("t_ns", "pool", "bytes_", "is_write", "region", "weight", "host")
-# constructor positional order; 7 positionals == every column passed
+COLUMNS = ("t_ns", "pool", "bytes_", "is_write", "region", "weight", "host", "qos")
+# constructor positional order; 8 positionals == every column passed
 _CTOR_ARITY = len(COLUMNS)
+# the trailing default-carrying columns a derived rebuild must thread through
+_N_PASSTHROUGH = 3
 # column names distinctive enough to signal "this argument reads an existing
 # trace" — generic names (pool/region/host) appear on non-trace objects
 # (``self.host``, ``region.pool``) and would false-positive
@@ -131,7 +133,9 @@ class ContractChecker(Checker):
             kwargs = {kw.arg for kw in n.keywords}
             missing = [
                 c
-                for i, c in enumerate(COLUMNS[-2:], start=_CTOR_ARITY - 2)
+                for i, c in enumerate(
+                    COLUMNS[-_N_PASSTHROUGH:], start=_CTOR_ARITY - _N_PASSTHROUGH
+                )
                 if c not in kwargs and (kind == "build" or len(n.args) <= i)
             ]
             if kind == "build" and missing:

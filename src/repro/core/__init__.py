@@ -66,6 +66,7 @@ from .topology import (
     FlatTopology,
     FlatTopologyStack,
     Pool,
+    QosSpec,
     Switch,
     Topology,
     TopologyOverride,
@@ -132,6 +133,7 @@ __all__ = [
     "ScenarioSuite",
     "SimReport",
     "SweepResult",
+    "QosSpec",
     "Switch",
     "TPU_V5E",
     "Tenant",

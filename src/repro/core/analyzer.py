@@ -114,6 +114,9 @@ class DispatchStats:
     staged device buffers in place; ``aot_cache_hit`` whether it ran a
     pre-compiled executable.  Non-pipeline dispatches leave all six at
     their defaults.
+
+    ``qos_classes`` is the number of QoS classes the dispatched graph
+    decomposed congestion over (1 = the plain FIFO fabric).
     """
 
     devices_used: int = 1
@@ -126,6 +129,7 @@ class DispatchStats:
     compute_s: float = 0.0
     donated: bool = False
     aot_cache_hit: bool = False
+    qos_classes: int = 1
 
 
 def _opt_add(a: Optional[np.ndarray], b: Optional[np.ndarray]) -> Optional[np.ndarray]:
@@ -144,6 +148,9 @@ class DelayBreakdown:
     hosts); the optional ``per_host_*`` arrays carry the host-segmented
     decomposition of each delay class for multi-host fabric analyses.  Each
     per-host array sums (within analyzer tolerance) to its fabric total.
+    ``per_class_congestion_ns`` decomposes queueing delay by QoS class
+    (length ``n_qos_classes``; ``[congestion_ns]`` on plain FIFO fabrics,
+    ``None`` when the producing path predates the QoS axis).
     """
 
     latency_ns: float
@@ -155,6 +162,7 @@ class DelayBreakdown:
     per_host_latency_ns: Optional[np.ndarray] = None  # [H]
     per_host_congestion_ns: Optional[np.ndarray] = None  # [H]
     per_host_bandwidth_ns: Optional[np.ndarray] = None  # [H]
+    per_class_congestion_ns: Optional[np.ndarray] = None  # [C]
 
     @property
     def total_ns(self) -> float:
@@ -182,6 +190,9 @@ class DelayBreakdown:
             _opt_add(self.per_host_latency_ns, other.per_host_latency_ns),
             _opt_add(self.per_host_congestion_ns, other.per_host_congestion_ns),
             _opt_add(self.per_host_bandwidth_ns, other.per_host_bandwidth_ns),
+            _opt_add(
+                self.per_class_congestion_ns, other.per_class_congestion_ns
+            ),
         )
 
     @staticmethod
@@ -322,8 +333,16 @@ def analyze_ref(
     latency_ns = float(per_event_lat.sum())
 
     # -- 2. congestion delay (cascaded serial queues, deepest switch first) - #
+    # QoS fabrics (per-switch priority/WFQ disciplines) replace the single
+    # FIFO scan with per-level / per-class scans over the same sorted
+    # subsequence; plain FIFO fabrics take the historical path bitwise.
+    C = int(flat.n_qos_classes)
+    qos_on = flat.has_qos
+    qcls = np.clip(events.qos.astype(np.int64), 0, C - 1)
+    w_table = flat.class_weight_table().astype(np.float64)
     per_switch_cong = np.zeros((S,), np.float64)
     per_host_cong = np.zeros((H,), np.float64)
+    per_class_cong = np.zeros((C,), np.float64)
     sorted_now = bool(presorted)
     for s in flat.stage_order():
         stt = float(flat.switch_stt_ns[s])
@@ -336,12 +355,38 @@ def analyze_ref(
             order = np.argsort(t, kind="stable")
             m_sorted = mask[order]
             sub = order[m_sorted]
-        start = serial_queue_ref(t[sub], stt)
+        disc = (
+            flat.switch_discipline[s]
+            if qos_on and flat.switch_discipline
+            else "fifo"
+        )
+        if disc == "fifo":
+            start = serial_queue_ref(t[sub], stt)
+        elif disc == "priority":
+            # event of class c takes its start from the FIFO scan over the
+            # subsequence of classes <= c (strict priority, FIFO in class)
+            q_sub = qcls[sub]
+            start = np.empty((len(sub),), np.float64)
+            for lvl in range(C):
+                lv = q_sub <= lvl
+                st_l = serial_queue_ref(t[sub[lv]], stt)
+                start[q_sub == lvl] = st_l[q_sub[lv] == lvl]
+        else:  # wfq: per-class virtual time with inflated service stt*W/w_c
+            q_sub = qcls[sub]
+            w_row = w_table[s]
+            w_total = float(w_row.sum())
+            start = np.empty((len(sub),), np.float64)
+            for c in range(C):
+                cm = q_sub == c
+                start[cm] = serial_queue_ref(
+                    t[sub[cm]], stt * w_total / float(w_row[c])
+                )
         delay = start - t[sub]
         t[sub] = start
         sorted_now = False  # this stage rewrote times
         per_switch_cong[s] = delay.sum()
         per_host_cong += np.bincount(host[sub], weights=delay, minlength=H)[:H]
+        per_class_cong += np.bincount(qcls[sub], weights=delay, minlength=C)[:C]
     congestion_ns = float(per_switch_cong.sum())
 
     # -- 3. bandwidth delay (windowed, after latency+congestion shifts) ---- #
@@ -391,6 +436,7 @@ def analyze_ref(
         per_host_lat,
         per_host_cong,
         per_host_bw,
+        per_class_cong,
     )
 
 
@@ -548,10 +594,11 @@ def _analyze_pipeline_jax(
     contribute zero bytes to every switch — skipping them is exact, and
     ``W`` (sum of per-stage capacity buckets) is typically much smaller
     than padded ``N``.  Latency stays a full-plane gather (it needs no
-    times).  Returns the nine breakdown leaves of :func:`_analyze_jax`
-    plus ``(t_fin, idx_fin)`` — shaped/typed exactly like the two donated
-    inputs, so XLA serves them from the donated buffers and steady-state
-    dispatch allocates nothing on device.
+    times).  Returns the ten breakdown leaves of :func:`_analyze_jax`
+    (this path is FIFO-only, so the per-class leaf is the degenerate
+    ``[congestion]``) plus ``(t_fin, idx_fin)`` — shaped/typed exactly
+    like the two donated inputs, so XLA serves them from the donated
+    buffers and steady-state dispatch allocates nothing on device.
     """
     V = pool_latency_ns.shape[0]
     S = switch_stt_ns.shape[0]
@@ -605,14 +652,15 @@ def _analyze_pipeline_jax(
             latency, congestion, bandwidth,
             per_pool_lat, per_switch_cong, per_switch_bw_d,
             latency[None], congestion[None], bandwidth[None],
+            congestion[None],
             t_fin, idx_fin,
         )
 
     outs = jax.vmap(one)(
         t_pack, idx_pack, pool, nbytes, weight, valid, bw_window_ns, lat_scale
     )
-    summed = tuple(x.sum(axis=0) for x in outs[:9])
-    return summed + (outs[9], outs[10])
+    summed = tuple(x.sum(axis=0) for x in outs[:10])
+    return summed + (outs[10], outs[11])
 
 
 def _analyze_jax(
@@ -621,6 +669,7 @@ def _analyze_jax(
     nbytes: jnp.ndarray,  # [N] f32 (padded entries: 0)
     weight: jnp.ndarray,  # [N] f32 statistical multiplicity
     host: jnp.ndarray,  # [N] i32 attached-host index (padded entries: 0)
+    qos: jnp.ndarray,  # [N] i32 QoS class ids (padded entries: 0)
     valid: jnp.ndarray,  # [N] bool
     lat_scale: jnp.ndarray,  # [V] device-cache latency scale (ones: no cache)
     bits_table: jnp.ndarray,  # [V] i32 per-virtual-pool route word (plan_cascade)
@@ -629,6 +678,8 @@ def _analyze_jax(
     route: jnp.ndarray,  # [V, S]
     switch_stt_ns: jnp.ndarray,  # [S]
     switch_bw: jnp.ndarray,  # [S] bytes/ns
+    disc_code: jnp.ndarray,  # [S] i32 per-switch discipline codes
+    class_weights: jnp.ndarray,  # [S, C] f32 per-switch class weights
     stage_order: Tuple[int, ...],  # static
     n_windows: int,  # static
     n_hosts: int,  # static
@@ -636,6 +687,7 @@ def _analyze_jax(
     impl: str = "inline",  # 'inline' | 'pallas' | 'pallas_interpret'
     fused: bool = True,  # False: legacy per-stage argsort loop (benchmarks)
     merge_plan=None,  # static merge schedule from plan_cascade (fused only)
+    qos_on: bool = False,  # static: route congestion through the QoS cascade
 ):
     """One epoch's three-delay analysis; the fused path (default) assumes
     the events were staged time-sorted with padding at the tail (the
@@ -648,12 +700,24 @@ def _analyze_jax(
     see the merged timeline while per-host RCs stay private, and each delay
     class is additionally host-segmented on device.  The ``n_hosts == 1``
     graph is exactly the historical single-host one.
+
+    ``qos_on`` (static) swaps the FIFO cascade for the data-driven QoS
+    cascade (:func:`repro.kernels.ref.qos_cascade_dyn`): per-switch
+    disciplines/weights become runtime operands and a tenth output leaf
+    decomposes congestion by QoS class.  ``qos_on=False`` leaves the
+    congestion graph bitwise identical to the historical one (``qos``,
+    ``disc_code`` and ``class_weights`` go unused) with the degenerate
+    ``[congestion]`` tenth leaf.
     """
     V = pool_latency_ns.shape[0]
     P = V // n_hosts  # physical pools
     S = switch_stt_ns.shape[0]
     f32 = t.dtype
     vp = pool if n_hosts == 1 else host * P + pool
+    if qos_on and not fused:
+        raise ValueError(
+            "QoS disciplines require the fused cascade (fused=True)"
+        )
 
     # -- latency ----------------------------------------------------------- #
     # device-cache hits are charged at device-DRAM latency via the per-vp
@@ -687,29 +751,59 @@ def _analyze_jax(
 
         stage_arr = jnp.asarray(stage_order, jnp.int32)
         ev_bits = jnp.where(valid, bits_table[vp], 0)
-        t_fin, slot_idx, psd = kops.congestion_cascade(
-            t_cur,
-            ev_bits,
-            switch_stt_ns[stage_arr],
-            impl="ref" if impl == "inline" else impl,
-            merge_plan=merge_plan,
-            hosts=None if n_hosts == 1 else host,
-            n_hosts=n_hosts,
-        )
-        if n_hosts == 1:
-            per_switch_cong = jnp.zeros((S,), f32).at[stage_arr].set(psd)
+        if qos_on:
+            qos_e = jnp.where(valid, qos, 0)
+            t_fin, slot_idx, psd = kops.qos_congestion_cascade(
+                t_cur,
+                ev_bits,
+                switch_stt_ns[stage_arr],
+                qos_e,
+                disc_code[stage_arr],
+                class_weights[stage_arr],
+                impl="ref" if impl == "inline" else impl,
+                hosts=None if n_hosts == 1 else host,
+                n_hosts=n_hosts,
+            )
+            # psd is [S_stages, H, C]: host- and class-segmented queueing delay
+            per_switch_cong = jnp.zeros((S,), f32).at[stage_arr].set(
+                psd.sum(axis=(1, 2))
+            )
+            per_class_cong = psd.sum(axis=(0, 1))
             congestion = per_switch_cong.sum()
-            per_host_cong = congestion[None]
+            if n_hosts == 1:
+                per_host_cong = congestion[None]
+            else:
+                per_host_cong = psd.sum(axis=(0, 2))
+            # the QoS cascade's fold is data-driven (always runs), so slot
+            # order never matches input order
+            has_merges = True
         else:
-            # psd is [S_stages, H]: host-segmented per-stage queueing delay
-            per_switch_cong = jnp.zeros((S,), f32).at[stage_arr].set(psd.sum(axis=1))
-            per_host_cong = psd.sum(axis=0)
-            congestion = per_switch_cong.sum()
-        # the Pallas kernel always runs the conservative merge schedule, so
-        # its slot order never matches input order
-        has_merges = impl != "inline" or merge_plan is None or any(
-            len(ops) for ops in merge_plan
-        )
+            t_fin, slot_idx, psd = kops.congestion_cascade(
+                t_cur,
+                ev_bits,
+                switch_stt_ns[stage_arr],
+                impl="ref" if impl == "inline" else impl,
+                merge_plan=merge_plan,
+                hosts=None if n_hosts == 1 else host,
+                n_hosts=n_hosts,
+            )
+            if n_hosts == 1:
+                per_switch_cong = jnp.zeros((S,), f32).at[stage_arr].set(psd)
+                congestion = per_switch_cong.sum()
+                per_host_cong = congestion[None]
+            else:
+                # psd is [S_stages, H]: host-segmented per-stage queueing delay
+                per_switch_cong = jnp.zeros((S,), f32).at[stage_arr].set(
+                    psd.sum(axis=1)
+                )
+                per_host_cong = psd.sum(axis=0)
+                congestion = per_switch_cong.sum()
+            per_class_cong = congestion[None]
+            # the Pallas kernel always runs the conservative merge schedule, so
+            # its slot order never matches input order
+            has_merges = impl != "inline" or merge_plan is None or any(
+                len(ops) for ops in merge_plan
+            )
         if has_merges:
             # bandwidth runs in final slot order; gather payloads through
             # the cascade's permutation (slot k held input event slot_idx[k])
@@ -765,6 +859,7 @@ def _analyze_jax(
                 )
         per_switch_cong = jnp.stack(per_switch_list)
         congestion = per_switch_cong.sum()
+        per_class_cong = congestion[None]
         if n_hosts == 1:
             per_host_cong = congestion[None]
 
@@ -800,6 +895,7 @@ def _analyze_jax(
         latency, congestion, bandwidth,
         per_pool_lat, per_switch_cong, per_switch_bw_d,
         per_host_lat, per_host_cong, per_host_bw,
+        per_class_cong,
     )
 
 
@@ -809,6 +905,7 @@ def _analyze_batch_jax(
     nbytes: jnp.ndarray,  # [B, N]
     weight: jnp.ndarray,  # [B, N]
     host: jnp.ndarray,  # [B, N]
+    qos: jnp.ndarray,  # [B, N]
     valid: jnp.ndarray,  # [B, N]
     bw_window_ns: jnp.ndarray,  # [B] per-epoch window length
     lat_scale: jnp.ndarray,  # [B, V] per-epoch device-cache latency scale
@@ -818,12 +915,15 @@ def _analyze_batch_jax(
     route: jnp.ndarray,
     switch_stt_ns: jnp.ndarray,
     switch_bw: jnp.ndarray,
+    disc_code: jnp.ndarray,  # [S]
+    class_weights: jnp.ndarray,  # [S, C]
     stage_order: Tuple[int, ...],
     n_windows: int,
     n_hosts: int,
     impl: str = "inline",
     fused: bool = True,
     merge_plan=None,
+    qos_on: bool = False,
 ):
     """B stacked epochs -> breakdown totals, accumulated on device.
 
@@ -833,15 +933,17 @@ def _analyze_batch_jax(
     single small transfer per batch.
     """
 
-    def one(t1, pool1, nbytes1, weight1, host1, valid1, bww1, scale1):
+    def one(t1, pool1, nbytes1, weight1, host1, qos1, valid1, bww1, scale1):
         return _analyze_jax(
-            t1, pool1, nbytes1, weight1, host1, valid1, scale1, bits_table,
+            t1, pool1, nbytes1, weight1, host1, qos1, valid1, scale1, bits_table,
             pool_latency_ns, local_latency_ns, route, switch_stt_ns, switch_bw,
+            disc_code, class_weights,
             stage_order=stage_order, n_windows=n_windows, n_hosts=n_hosts,
             bw_window_ns=bww1, impl=impl, fused=fused, merge_plan=merge_plan,
+            qos_on=qos_on,
         )
 
-    xs = (t, pool, nbytes, weight, host, valid, bw_window_ns, lat_scale)
+    xs = (t, pool, nbytes, weight, host, qos, valid, bw_window_ns, lat_scale)
     if impl in ("pallas", "pallas_interpret"):
         outs = jax.lax.map(lambda args: one(*args), xs)
     else:
@@ -855,6 +957,7 @@ def _analyze_multi_jax(
     nbytes: jnp.ndarray,  # [K, B, N]
     weight: jnp.ndarray,  # [K, B, N]
     host: jnp.ndarray,  # [K, B, N]
+    qos: jnp.ndarray,  # [K, B, N]
     valid: jnp.ndarray,  # [K, B, N]
     bw_window_ns: jnp.ndarray,  # [K, B]
     lat_scale: jnp.ndarray,  # [K, B, V]
@@ -864,12 +967,15 @@ def _analyze_multi_jax(
     route: jnp.ndarray,
     switch_stt_ns: jnp.ndarray,
     switch_bw: jnp.ndarray,
+    disc_code: jnp.ndarray,  # [S] shared
+    class_weights: jnp.ndarray,  # [S, C] shared
     stage_order: Tuple[int, ...],
     n_windows: int,
     n_hosts: int,
     impl: str = "inline",
     fused: bool = True,
     merge_plan=None,
+    qos_on: bool = False,
 ):
     """K sessions × B epochs in one dispatch — per-SESSION totals on device.
 
@@ -880,16 +986,18 @@ def _analyze_multi_jax(
     and each session's epochs are reduced on device, so the host sees one
     ``[K, ...]`` transfer however many sessions coalesced."""
 
-    def one(t1, pool1, nbytes1, weight1, host1, valid1, bww1, scale1):
+    def one(t1, pool1, nbytes1, weight1, host1, qos1, valid1, bww1, scale1):
         return _analyze_batch_jax(
-            t1, pool1, nbytes1, weight1, host1, valid1, bww1, scale1,
+            t1, pool1, nbytes1, weight1, host1, qos1, valid1, bww1, scale1,
             bits_table, pool_latency_ns, local_latency_ns, route,
-            switch_stt_ns, switch_bw,
+            switch_stt_ns, switch_bw, disc_code, class_weights,
             stage_order=stage_order, n_windows=n_windows, n_hosts=n_hosts,
-            impl=impl, fused=fused, merge_plan=merge_plan,
+            impl=impl, fused=fused, merge_plan=merge_plan, qos_on=qos_on,
         )
 
-    return jax.vmap(one)(t, pool, nbytes, weight, host, valid, bw_window_ns, lat_scale)
+    return jax.vmap(one)(
+        t, pool, nbytes, weight, host, qos, valid, bw_window_ns, lat_scale
+    )
 
 
 def _analyze_fleet_jax(
@@ -898,6 +1006,7 @@ def _analyze_fleet_jax(
     nbytes: jnp.ndarray,  # [K, B, N]
     weight: jnp.ndarray,  # [K, B, N]
     host: jnp.ndarray,  # [K, B, N]
+    qos: jnp.ndarray,  # [K, B, N]
     valid: jnp.ndarray,  # [K, B, N]
     bw_window_ns: jnp.ndarray,  # [K, B]
     lat_scale: jnp.ndarray,  # [K, B, V]
@@ -907,12 +1016,15 @@ def _analyze_fleet_jax(
     route: jnp.ndarray,  # [V, S] shared (structure)
     switch_stt_ns: jnp.ndarray,  # [K, S]
     switch_bw: jnp.ndarray,  # [K, S]
+    disc_code: jnp.ndarray,  # [K, S] per-rack QoS policies (numeric leaves)
+    class_weights: jnp.ndarray,  # [K, S, C]
     stage_order: Tuple[int, ...],
     n_windows: int,
     n_hosts: int,
     impl: str = "inline",
     fused: bool = True,
     merge_plan=None,
+    qos_on: bool = False,
 ):
     """K racks × B epochs in one dispatch, per-RACK numeric topologies.
 
@@ -927,18 +1039,19 @@ def _analyze_fleet_jax(
     transfer at one ``[K, ...]`` vector.
     """
 
-    def one(t1, pool1, nbytes1, weight1, host1, valid1, bww1, scale1,
-            plat1, llat1, stt1, sbw1):
+    def one(t1, pool1, nbytes1, weight1, host1, qos1, valid1, bww1, scale1,
+            plat1, llat1, stt1, sbw1, disc1, cw1):
         return _analyze_batch_jax(
-            t1, pool1, nbytes1, weight1, host1, valid1, bww1, scale1,
-            bits_table, plat1, llat1, route, stt1, sbw1,
+            t1, pool1, nbytes1, weight1, host1, qos1, valid1, bww1, scale1,
+            bits_table, plat1, llat1, route, stt1, sbw1, disc1, cw1,
             stage_order=stage_order, n_windows=n_windows, n_hosts=n_hosts,
-            impl=impl, fused=fused, merge_plan=merge_plan,
+            impl=impl, fused=fused, merge_plan=merge_plan, qos_on=qos_on,
         )
 
     return jax.vmap(one)(
-        t, pool, nbytes, weight, host, valid, bw_window_ns, lat_scale,
+        t, pool, nbytes, weight, host, qos, valid, bw_window_ns, lat_scale,
         pool_latency_ns, local_latency_ns, switch_stt_ns, switch_bw,
+        disc_code, class_weights,
     )
 
 
@@ -953,6 +1066,9 @@ def _analyze_sweep_jax(
     cas_group: jnp.ndarray,  # [U] i32 cascade -> skeleton group
     cas_assign: jnp.ndarray,  # [U, R] i32 placement rows of unique cascades
     cas_stt: jnp.ndarray,  # [U, S] stt rows of unique cascades
+    cas_disc: jnp.ndarray,  # [U, S] i32 discipline rows of unique cascades
+    cas_weights: jnp.ndarray,  # [U, S, C] class-weight rows of unique cascades
+    qos_of_region: jnp.ndarray,  # [R] i32 QoS class per workload region
     group_of: jnp.ndarray,  # [K] i32 scenario -> skeleton group
     cascade_of: jnp.ndarray,  # [K] i32 scenario -> unique cascade
     assign: jnp.ndarray,  # [K, R] i32 placement matrix
@@ -966,6 +1082,7 @@ def _analyze_sweep_jax(
     n_windows: int,  # static
     n_hosts: int,  # static
     merge_plan=None,  # static
+    qos_on: bool = False,  # static: arbitrate cascades by QoS discipline
 ):
     """K scenarios × B epochs in ONE dispatch, per-scenario totals on device.
 
@@ -1002,24 +1119,35 @@ def _analyze_sweep_jax(
     S = switch_bw.shape[1]
     stage_arr = jnp.asarray(stage_order, jnp.int32)
     big = jnp.asarray(jnp.finfo(f32).max / 4, f32)
-    has_merges = merge_plan is None or any(len(ops) for ops in merge_plan)
+    # the QoS cascade's inter-stage fold is data-driven (always runs)
+    has_merges = qos_on or merge_plan is None or any(
+        len(ops) for ops in merge_plan
+    )
 
     # -- phase 1: the U unique congestion cascades -------------------------- #
-    def one_cascade(g, assign_u, stt_u):
+    def one_cascade(g, assign_u, stt_u, disc_u, cw_u):
         tg, vg, rg, hg = t[g], valid[g], region[g], host[g]
         pool_u = jnp.where(vg, assign_u[rg], 0)
         vp_u = pool_u if n_hosts == 1 else hg * P + pool_u
         bits_u = jnp.where(vg, bits_table[vp_u], 0)
+        # QoS class rides the region skeleton: derived on device per event
+        qg = jnp.where(vg, qos_of_region[rg], 0)
 
-        def per_epoch(t1, bits1, v1, h1):
+        def per_epoch(t1, bits1, v1, h1, q1):
             t_cur = jnp.where(v1, t1, big)
+            if qos_on:
+                return kops.qos_congestion_cascade(
+                    t_cur, bits1, stt_u[stage_arr], q1,
+                    disc_u[stage_arr], cw_u[stage_arr], impl="ref",
+                    hosts=None if n_hosts == 1 else h1, n_hosts=n_hosts,
+                )
             return kops.congestion_cascade(
                 t_cur, bits1, stt_u[stage_arr], impl="ref",
                 merge_plan=merge_plan,
                 hosts=None if n_hosts == 1 else h1, n_hosts=n_hosts,
             )
 
-        t_fin, slot_idx, psd = jax.vmap(per_epoch)(tg, bits_u, vg, hg)
+        t_fin, slot_idx, psd = jax.vmap(per_epoch)(tg, bits_u, vg, hg, qg)
         if has_merges:
             # slot-order payloads, gathered once per cascade (not per
             # scenario): slot k of epoch b held input event slot_idx[b, k]
@@ -1032,7 +1160,9 @@ def _analyze_sweep_jax(
             valid_e, host_e = vg, hg
         return t_fin, psd, region_e, nbytes_e, weight_e, valid_e, host_e
 
-    cas = jax.vmap(one_cascade)(cas_group, cas_assign, cas_stt)
+    cas = jax.vmap(one_cascade)(
+        cas_group, cas_assign, cas_stt, cas_disc, cas_weights
+    )
     (t_fin_u, psd_u, region_u, nbytes_u, weight_u, valid_u, host_u) = cas
 
     # -- phase 2: per-scenario latency/bandwidth reductions ----------------- #
@@ -1061,17 +1191,28 @@ def _analyze_sweep_jax(
             per_host_lat = jnp.einsum("bn,bnh->h", per_event_lat, host_onehot)
 
         # congestion: shared with every scenario of the same cascade
-        psd = psd_u[u]  # [B, S_stages] or [B, S_stages, H]
-        if n_hosts == 1:
+        psd = psd_u[u]  # [B, Sst] | [B, Sst, H] | [B, Sst, H, C] (qos_on)
+        if qos_on:
+            per_switch_cong = jnp.zeros((S,), f32).at[stage_arr].set(
+                psd.sum(axis=(0, 2, 3))
+            )
+            congestion = per_switch_cong.sum()
+            per_class_cong = psd.sum(axis=(0, 1, 2))
+            per_host_cong = (
+                congestion[None] if n_hosts == 1 else psd.sum(axis=(0, 1, 3))
+            )
+        elif n_hosts == 1:
             per_switch_cong = jnp.zeros((S,), f32).at[stage_arr].set(psd.sum(axis=0))
             congestion = per_switch_cong.sum()
             per_host_cong = congestion[None]
+            per_class_cong = congestion[None]
         else:
             per_switch_cong = jnp.zeros((S,), f32).at[stage_arr].set(
                 psd.sum(axis=(0, 2))
             )
             per_host_cong = psd.sum(axis=(0, 1))
             congestion = per_switch_cong.sum()
+            per_class_cong = congestion[None]
 
         # bandwidth: windows on the shared post-congestion times + this
         # scenario's latency component, one segment-sum per scenario
@@ -1113,6 +1254,7 @@ def _analyze_sweep_jax(
             latency, congestion, bandwidth,
             per_pool_lat, per_switch_cong, per_switch_bw,
             per_host_lat, per_host_cong, per_host_bw,
+            per_class_cong,
         )
 
     return jax.vmap(per_scenario)(
@@ -1145,8 +1287,8 @@ class PendingBatch:
         # the single host-boundary crossing for the whole batch; the
         # pipeline dispatch's trailing (t_fin, idx_pack) leaves stay on
         # device and are simply dropped
-        lat, cong, bw, ppl, psc, psb, phl, phc, phb = jax.device_get(
-            self.out[:9]
+        lat, cong, bw, ppl, psc, psb, phl, phc, phb, pcc = jax.device_get(
+            self.out[:10]
         )
         stats = dataclasses.replace(
             self.stats,
@@ -1165,6 +1307,7 @@ class PendingBatch:
             phl.astype(np.float64),
             phc.astype(np.float64),
             phb.astype(np.float64),
+            pcc.astype(np.float64),
         )
 
 
@@ -1213,6 +1356,9 @@ class EpochAnalyzer:
         self._route = jnp.asarray(flat.route, dtype)
         self._stt = jnp.asarray(flat.switch_stt_ns, dtype)
         self._bw = jnp.asarray(flat.switch_bandwidth_gbps, dtype)
+        self._disc = jnp.asarray(flat.discipline_codes(), jnp.int32)
+        self._weights = jnp.asarray(flat.class_weight_table(), dtype)
+        self.qos_on = bool(flat.has_qos)
         self.impl = impl
         self.fused = bool(fused)
         if self.fused and flat.n_switches > 31:
@@ -1220,6 +1366,11 @@ class EpochAnalyzer:
             # RCs) in a 31-bit route word; very wide fabrics fall back to
             # the legacy per-stage loop — slower, but any host count works
             self.fused = False
+        if self.qos_on and not self.fused:
+            raise ValueError(
+                "QoS disciplines require the fused cascade: pass fused=True "
+                "and keep the fabric within the 31-switch route-word budget"
+            )
         if self.fused:
             bits_pool, self._merge_plan, self._stage_order = plan_cascade(flat)
         else:
@@ -1229,7 +1380,8 @@ class EpochAnalyzer:
         self._bits_table = jnp.asarray(bits_pool)
         self._stager = EventStager(np.dtype(jnp.dtype(dtype).name))
         _static = (
-            "stage_order", "n_windows", "n_hosts", "impl", "fused", "merge_plan",
+            "stage_order", "n_windows", "n_hosts", "impl", "fused",
+            "merge_plan", "qos_on",
         )
         self._batch_fn = jax.jit(_analyze_batch_jax, static_argnames=_static)
         self._multi_fn = jax.jit(_analyze_multi_jax, static_argnames=_static)
@@ -1243,7 +1395,9 @@ class EpochAnalyzer:
                     "resident dispatch is a pure-XLA graph"
                 )
             self._aot = aot if aot is not None else AotDispatchCache()
-            self._chain_plan = plan_chain(flat)
+            # the packed compact cascade is FIFO-only: QoS fabrics run the
+            # full-plane graph (still AOT-cached) instead
+            self._chain_plan = None if self.qos_on else plan_chain(flat)
 
     _bucket = staticmethod(bucket_pow2)
 
@@ -1304,6 +1458,10 @@ class EpochAnalyzer:
             bits_s = jax.ShapeDtypeStruct(
                 self._bits_table.shape, self._bits_table.dtype
             )
+            topo_b = topo + (self._disc, self._weights)
+            topo_bs = tuple(
+                jax.ShapeDtypeStruct(a.shape, a.dtype) for a in topo_b
+            )
             key = ("batch", b_bucket, n_bucket)
 
             def build():
@@ -1311,17 +1469,18 @@ class EpochAnalyzer:
                     _analyze_batch_jax,
                     static_argnames=(
                         "stage_order", "n_windows", "n_hosts", "impl",
-                        "fused", "merge_plan",
+                        "fused", "merge_plan", "qos_on",
                     ),
                 )
                 return jitted.lower(
-                    *sds, bits_s, *topo_s,
+                    *sds, bits_s, *topo_bs,
                     stage_order=self._stage_order,
                     n_windows=self.n_windows,
                     n_hosts=self.flat.n_hosts,
                     impl=self.impl,
                     fused=self.fused,
                     merge_plan=self._merge_plan,
+                    qos_on=self.qos_on,
                 ).compile()
 
         return key, build
@@ -1382,7 +1541,7 @@ class EpochAnalyzer:
         else:
             host_args = (
                 buf["t"], buf["pool"], buf["bytes"], buf["weight"],
-                buf["host"], buf["valid"], bw_window, scale_buf,
+                buf["host"], buf["qos"], buf["valid"], bw_window, scale_buf,
             )
         dev_args, transfer_s = timed_device_put(list(host_args))
 
@@ -1406,18 +1565,20 @@ class EpochAnalyzer:
                 out = exe(
                     *dev_args, self._bits_table, self._pool_lat,
                     self._local_lat, self._route, self._stt, self._bw,
+                    self._disc, self._weights,
                 )
         else:
             t2 = time.perf_counter()
             out = self._batch_fn(
                 *dev_args, self._bits_table, self._pool_lat, self._local_lat,
-                self._route, self._stt, self._bw,
+                self._route, self._stt, self._bw, self._disc, self._weights,
                 stage_order=self._stage_order,
                 n_windows=self.n_windows,
                 n_hosts=H,
                 impl=self.impl,
                 fused=self.fused,
                 merge_plan=self._merge_plan,
+                qos_on=self.qos_on,
             )
         dispatch_s = time.perf_counter() - t2
         stats = DispatchStats(
@@ -1431,6 +1592,7 @@ class EpochAnalyzer:
             compute_s=dispatch_s,
             donated=donated,
             aot_cache_hit=aot_hit,
+            qos_classes=self.flat.n_qos_classes,
         )
         self.last_dispatch = stats
         return PendingBatch(self, tuple(out), stats)
@@ -1495,6 +1657,7 @@ class EpochAnalyzer:
             shard_rows=0,
             rows=len(traces),
             padded_fraction=float(b_bucket - len(traces)) / b_bucket,
+            qos_classes=self.flat.n_qos_classes,
         )
         out = self._batch_fn(
             jnp.asarray(buf["t"]),
@@ -1502,6 +1665,7 @@ class EpochAnalyzer:
             jnp.asarray(buf["bytes"]),
             jnp.asarray(buf["weight"]),
             jnp.asarray(buf["host"]),
+            jnp.asarray(buf["qos"]),
             jnp.asarray(buf["valid"]),
             jnp.asarray(bw_window, self.dtype),
             jnp.asarray(scale_buf),
@@ -1511,15 +1675,18 @@ class EpochAnalyzer:
             self._route,
             self._stt,
             self._bw,
+            self._disc,
+            self._weights,
             stage_order=self._stage_order,
             n_windows=self.n_windows,
             n_hosts=H,
             impl=self.impl,
             fused=self.fused,
             merge_plan=self._merge_plan,
+            qos_on=self.qos_on,
         )
         # the single host-boundary crossing for the whole batch
-        lat, cong, bw, ppl, psc, psb, phl, phc, phb = jax.device_get(out)
+        lat, cong, bw, ppl, psc, psb, phl, phc, phb, pcc = jax.device_get(out)
         return DelayBreakdown(
             float(lat),
             float(cong),
@@ -1530,6 +1697,7 @@ class EpochAnalyzer:
             phl.astype(np.float64),
             phc.astype(np.float64),
             phb.astype(np.float64),
+            pcc.astype(np.float64),
         )
 
     def analyze_batch_multi(
@@ -1626,6 +1794,7 @@ class EpochAnalyzer:
             shard_rows=k_bucket // n_shards if mesh is not None else 0,
             rows=len(rows),
             padded_fraction=float(k_bucket - len(rows)) / k_bucket,
+            qos_classes=self.flat.n_qos_classes,
         )
         if mesh is not None:
             self.sharded_dispatches += 1
@@ -1637,6 +1806,7 @@ class EpochAnalyzer:
             put_k(buf["bytes"]),
             put_k(buf["weight"]),
             put_k(buf["host"]),
+            put_k(buf["qos"]),
             put_k(buf["valid"]),
             put_k(jnp.asarray(bw_window, self.dtype)),
             put_k(scale_buf),
@@ -1646,15 +1816,18 @@ class EpochAnalyzer:
             put_r(self._route),
             put_r(self._stt),
             put_r(self._bw),
+            put_r(self._disc),
+            put_r(self._weights),
             stage_order=self._stage_order,
             n_windows=self.n_windows,
             n_hosts=H,
             impl=self.impl,
             fused=self.fused,
             merge_plan=self._merge_plan,
+            qos_on=self.qos_on,
         )
         # one [K, ...] transfer for every coalesced session
-        lat, cong, bw, ppl, psc, psb, phl, phc, phb = jax.device_get(res)
+        lat, cong, bw, ppl, psc, psb, phl, phc, phb, pcc = jax.device_get(res)
         for k, i in enumerate(rows):
             out[i] = DelayBreakdown(
                 float(lat[k]),
@@ -1666,6 +1839,7 @@ class EpochAnalyzer:
                 phl[k].astype(np.float64),
                 phc[k].astype(np.float64),
                 phb[k].astype(np.float64),
+                pcc[k].astype(np.float64),
             )
         return out
 
@@ -1730,16 +1904,40 @@ class FineGrainedSimulator:
         lat_scale: Optional[np.ndarray] = None,
         presorted: bool = False,
     ) -> DelayBreakdown:
+        bd, _ = self._run(events, lat_scale, presorted)
+        return bd
+
+    def final_times(
+        self, events: MemEvents, presorted: bool = False
+    ) -> np.ndarray:
+        """Per-event post-cascade times (the DES decision oracle the
+        vectorized QoS cascades are gated against): ``out[i]`` is event
+        ``i``'s departure time from its last switch — its service *start*
+        under ``bandwidth_mode='stt'``, matching the kernels' final-time
+        semantics exactly.  Times align with the simulated (time-sorted)
+        event order; pass ``presorted=True`` on an already-sorted trace to
+        keep input order."""
+        _, t_out = self._run(events, None, presorted)
+        return t_out
+
+    def _run(
+        self,
+        events: MemEvents,
+        lat_scale: Optional[np.ndarray],
+        presorted: bool,
+    ) -> Tuple[DelayBreakdown, np.ndarray]:
         flat = self.flat
         P, S, H = flat.n_pools, flat.n_switches, flat.n_hosts
+        C = int(getattr(flat, "n_qos_classes", 1))
         if events.n == 0:
-            return DelayBreakdown.zero(P, S, H)
+            return DelayBreakdown.zero(P, S, H), np.zeros((0,), np.float64)
         _check_reachable(flat, events)
         # presorted: the caller promises a non-decreasing timeline (e.g.
         # merge_host_traces output), skipping even the monotone check
         ev = events if presorted else events.sorted_by_time()
         pool = ev.pool.astype(np.int64)
         hostv = ev.host.astype(np.int64)
+        qcls = np.clip(ev.qos.astype(np.int64), 0, C - 1)
         vpool = hostv * P + pool
         per_event_lat = np.maximum(
             flat.pool_latency_ns[vpool] - flat.local_latency_ns, 0.0
@@ -1751,11 +1949,24 @@ class FineGrainedSimulator:
         per_pool_lat = np.bincount(pool, weights=per_event_lat, minlength=P)[:P]
         per_host_lat = np.bincount(hostv, weights=per_event_lat, minlength=H)[:H]
 
-        next_free = np.zeros((S,), np.float64)
+        # per-(switch, class) horizons: FIFO switches use column 0 (one
+        # shared queue), strict-priority ones carve per-level horizons a
+        # high-class arrival pushes forward, WFQ ones advance class-private
+        # virtual time by the weight-inflated service
+        discs = (
+            list(flat.switch_discipline)
+            if getattr(flat, "switch_discipline", None)
+            else ["fifo"] * S
+        )
+        w_table = flat.class_weight_table().astype(np.float64)
+        w_total = w_table.sum(axis=1)
+        fin = np.zeros((S, C), np.float64)
         per_switch_cong = np.zeros((S,), np.float64)
         per_switch_bw = np.zeros((S,), np.float64)
         per_host_cong = np.zeros((H,), np.float64)
         per_host_bw = np.zeros((H,), np.float64)
+        per_class_cong = np.zeros((C,), np.float64)
+        t_out = np.zeros((ev.n,), np.float64)
         # priority queue of (time, seq, event_idx, stage_pos); ``ev`` is
         # time-sorted, so the seed list already satisfies the heap invariant
         # — one O(n) pass instead of n heappushes.
@@ -1767,6 +1978,7 @@ class FineGrainedSimulator:
             t_arr, _, i, stage = heapq.heappop(heap)
             path = self._paths[vpool[i]]
             if stage >= len(path):
+                t_out[i] = t_arr
                 continue
             s = path[stage]
             stt = float(flat.switch_stt_ns[s])
@@ -1775,10 +1987,21 @@ class FineGrainedSimulator:
                 service = max(stt, float(ev.bytes_[i]) / bw if bw > 0 else stt)
             else:
                 service = stt
-            start = max(t_arr, next_free[s])
-            next_free[s] = start + service
+            disc = discs[s]
+            c = int(qcls[i])
+            if disc == "priority":
+                start = max(t_arr, fin[s, c])
+                for lvl in range(c, C):
+                    fin[s, lvl] = max(t_arr, fin[s, lvl]) + service
+            elif disc == "wfq":
+                start = max(t_arr, fin[s, c])
+                fin[s, c] = start + service * w_total[s] / w_table[s, c]
+            else:  # fifo: one shared horizon
+                start = max(t_arr, fin[s, 0])
+                fin[s, 0] = start + service
             per_switch_cong[s] += start - t_arr  # queueing delay
             per_host_cong[hostv[i]] += start - t_arr
+            per_class_cong[c] += start - t_arr
             if self.bandwidth_mode == "per_txn" and service > stt:
                 per_switch_bw[s] += service - stt
                 per_host_bw[hostv[i]] += service - stt
@@ -1795,4 +2018,5 @@ class FineGrainedSimulator:
             per_host_lat,
             per_host_cong,
             per_host_bw,
-        )
+            per_class_cong,
+        ), t_out

@@ -90,6 +90,8 @@ class SimReport:
     per_pool_latency_ns: Optional[np.ndarray] = None
     per_switch_congestion_ns: Optional[np.ndarray] = None
     per_switch_bandwidth_ns: Optional[np.ndarray] = None
+    qos_classes: int = 1  # arbitration classes of the attached fabric
+    per_class_congestion_ns: Optional[np.ndarray] = None  # [qos_classes]
     migration_moved_bytes: float = 0.0
     cache_hit_fraction: float = float("nan")  # device-cache running hit rate
     dropped_batches: int = 0  # analysis batches lost to analyzer failures
@@ -118,6 +120,16 @@ class SimReport:
         if self.native_s <= 0:
             return float("nan")
         return (self.native_s + self.analyzer_s + self.injected_sleep_s) / self.native_s
+
+    def qos_delay_shares(self) -> List[float]:
+        """Fraction of switch queueing delay charged to each QoS class."""
+        pcc = self.per_class_congestion_ns
+        if pcc is None:
+            return [1.0]
+        total = float(pcc.sum())
+        if total <= 0.0:
+            return [0.0] * len(pcc)
+        return [float(x) / total for x in pcc]
 
     def summary(self) -> Dict[str, float]:
         """The full report contract — every scalar a benchmark JSON consumer
@@ -149,6 +161,8 @@ class SimReport:
             "compute_s": self.compute_s,
             "donated_dispatches": self.donated_dispatches,
             "aot_cache_hits": self.aot_cache_hits,
+            "qos_classes": self.qos_classes,
+            "qos_delay_shares": self.qos_delay_shares(),
         }
 
 
@@ -245,6 +259,8 @@ class AttachedProgram(EngineClient):
             per_pool_latency_ns=np.zeros((sim.flat.n_pools,)),
             per_switch_congestion_ns=np.zeros((sim.flat.n_switches,)),
             per_switch_bandwidth_ns=np.zeros((sim.flat.n_switches,)),
+            qos_classes=sim.flat.n_qos_classes,
+            per_class_congestion_ns=np.zeros((sim.flat.n_qos_classes,)),
         )
         self._report_lock = threading.Lock()
         self._trace_cache: Optional[tuple] = None
@@ -354,6 +370,12 @@ class AttachedProgram(EngineClient):
             r.per_pool_latency_ns += bd.per_pool_latency_ns
             r.per_switch_congestion_ns += bd.per_switch_congestion_ns
             r.per_switch_bandwidth_ns += bd.per_switch_bandwidth_ns
+            if bd.per_class_congestion_ns is not None:
+                pcc = np.asarray(bd.per_class_congestion_ns, np.float64)
+                if len(pcc) == len(r.per_class_congestion_ns):
+                    r.per_class_congestion_ns += pcc
+                else:  # qos-off breakdown on a multi-class fabric: all class 0
+                    r.per_class_congestion_ns[0] += float(pcc.sum())
             r.simulated_s += delay_ns * 1e-9
             r.analyzer_s += analyzer_s
             if self._handle is not None:

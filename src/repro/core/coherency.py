@@ -78,6 +78,7 @@ def _subsample_bi(
         region=np.full((emit,), region, np.int32),
         weight=np.full((emit,), w_total / emit),
         host=np.full((emit,), host, np.int32),
+        qos=trace.qos[pick],
     )
 
 
@@ -236,6 +237,7 @@ class CoherencyModel:
             region=trace.region[pick],
             weight=np.full((emit,), scale),
             host=trace.host[pick],
+            qos=trace.qos[pick],
         )
         # coherency-miss latency: reads of shared regions that follow a write
         reads = shared_mask & ~trace.is_write

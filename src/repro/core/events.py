@@ -61,6 +61,9 @@ class MemEvents:
                onto one timeline; the analyzer routes each event through its
                (host, pool) pair so contention appears only at shared
                components.
+      qos:     [N] int32 QoS class (0 = default / highest priority).  Switch
+               arbiters running 'priority' or 'wfq' disciplines order their
+               queues by this class; FIFO switches ignore it.
     """
 
     t_ns: np.ndarray
@@ -70,14 +73,17 @@ class MemEvents:
     region: np.ndarray
     weight: np.ndarray = None  # type: ignore[assignment]
     host: np.ndarray = None  # type: ignore[assignment]
+    qos: np.ndarray = None  # type: ignore[assignment]
 
     def __post_init__(self) -> None:
         if self.weight is None:
             object.__setattr__(self, "weight", np.ones((len(self.t_ns),), np.float64))
         if self.host is None:
             object.__setattr__(self, "host", np.zeros((len(self.t_ns),), np.int32))
+        if self.qos is None:
+            object.__setattr__(self, "qos", np.zeros((len(self.t_ns),), np.int32))
         n = len(self.t_ns)
-        for f in ("pool", "bytes_", "is_write", "region", "weight", "host"):
+        for f in ("pool", "bytes_", "is_write", "region", "weight", "host", "qos"):
             if len(getattr(self, f)) != n:
                 raise ValueError(f"field {f} length mismatch")
 
@@ -108,6 +114,7 @@ class MemEvents:
             region=self.region[idx],
             weight=self.weight[idx],
             host=self.host[idx],
+            qos=self.qos[idx],
         )
 
     def with_host(self, host: int) -> "MemEvents":
@@ -115,6 +122,17 @@ class MemEvents:
         return dataclasses.replace(
             self, host=np.full((self.n,), int(host), np.int32)
         )
+
+    def with_qos(self, qos) -> "MemEvents":
+        """Copy with events tagged as QoS class ``qos`` — a scalar (a
+        tenant's whole trace usually shares one class) or a per-event
+        array."""
+        q = np.asarray(qos, np.int32)
+        if q.ndim == 0:
+            q = np.full((self.n,), int(q), np.int32)
+        elif q.shape != (self.n,):
+            raise ValueError(f"qos shape {q.shape} != ({self.n},)")
+        return dataclasses.replace(self, qos=q)
 
     def sample(self, rate: float, seed: int = 0) -> "MemEvents":
         """PEBS-style sampling: keep each event with probability ``rate`` and
@@ -150,6 +168,7 @@ class MemEvents:
         is_write: Optional[Iterable[bool]] = None,
         region: Optional[Iterable[int]] = None,
         host: Optional[Iterable[int]] = None,
+        qos: Optional[Iterable[int]] = None,
     ) -> "MemEvents":
         t = _as_column(t_ns, np.float64)
         p = _as_column(pool, np.int32)
@@ -169,7 +188,12 @@ class MemEvents:
             if host is not None
             else np.zeros(len(t), np.int32)
         )
-        return MemEvents(t, p, b, w, r, host=h)
+        q = (
+            _as_column(qos, np.int32)
+            if qos is not None
+            else np.zeros(len(t), np.int32)
+        )
+        return MemEvents(t, p, b, w, r, host=h, qos=q)
 
 
 def _as_column(x, dtype) -> np.ndarray:
@@ -196,6 +220,7 @@ def concat_events(traces: Sequence[MemEvents]) -> MemEvents:
         region=np.concatenate([t.region for t in traces]),
         weight=np.concatenate([t.weight for t in traces]),
         host=np.concatenate([t.host for t in traces]),
+        qos=np.concatenate([t.qos for t in traces]),
     )
 
 
@@ -254,7 +279,13 @@ class EventStager:
     the two never share buffers.
     """
 
-    _FIELDS = ("t", "pool", "bytes", "weight", "host", "valid")
+    _FIELDS = ("t", "pool", "bytes", "weight", "host", "qos", "valid")
+
+    # dispatches a bucket's natural caps must sit at (or below) half the
+    # sticky high-water mark before the sticky caps shrink to the recent
+    # peak — a transient burst stops pinning peak-size staging planes (and
+    # their AOT executables) after this many consecutive idle calls
+    CAP_DECAY_CALLS = 8
 
     def __init__(self, time_dtype: object = np.float32, slots: int = 1) -> None:
         self.time_dtype = np.dtype(time_dtype)
@@ -270,6 +301,11 @@ class EventStager:
         self._stack_bufs: Dict[Tuple[int, int, int], Dict[str, np.ndarray]] = {}
         self._stack_filled: Dict[Tuple[int, int, int], int] = {}
         self._cap_hwm: Dict[Tuple[int, int, int], Tuple[int, ...]] = {}
+        # idle-decay state per cap key: consecutive calls whose natural caps
+        # sat at <= half the sticky high-water mark, and the elementwise peak
+        # of the natural caps observed during that streak
+        self._cap_slack: Dict[Tuple[int, int, int], int] = {}
+        self._cap_peak: Dict[Tuple[int, int, int], Tuple[int, ...]] = {}
 
     def rotate(self, b_bucket: int, n_bucket: int) -> int:
         """Advance this bucket's ring and return the now-current slot."""
@@ -288,6 +324,7 @@ class EventStager:
                 "bytes": np.zeros((b_bucket, n_bucket), self.time_dtype),
                 "weight": np.zeros((b_bucket, n_bucket), self.time_dtype),
                 "host": np.zeros((b_bucket, n_bucket), np.int32),
+                "qos": np.zeros((b_bucket, n_bucket), np.int32),
                 "valid": np.zeros((b_bucket, n_bucket), bool),
                 "span": np.zeros((b_bucket,), np.float64),
             }
@@ -368,14 +405,40 @@ class EventStager:
             _bucket_pow2(int(counts[:, p].max()), cap_floor)
             for p in range(n_stages)
         )
-        # sticky caps: never shrink within a (batch, length) bucket, so the
-        # packed width — and with it the AOT executable key — stabilizes
-        # after the first few dispatches instead of flapping with each
-        # epoch's depth distribution (zero steady-state recompiles)
+        # sticky caps: hold the high-water mark within a (batch, length)
+        # bucket, so the packed width — and with it the AOT executable key —
+        # stabilizes after the first few dispatches instead of flapping with
+        # each epoch's depth distribution (zero steady-state recompiles).
+        # Idle decay: once CAP_DECAY_CALLS consecutive calls need at most
+        # half the held caps, shrink to the peak demand of that streak —
+        # a one-off burst stops pinning peak-size planes forever, while a
+        # workload oscillating around the mark never shrinks (each touch of
+        # the high caps resets the streak, so decay costs at most one
+        # recompile per genuine regime change.)
         cap_key = (b_bucket, n_bucket, n_stages)
+        natural = caps
         prev = self._cap_hwm.get(cap_key)
         if prev is not None:
-            caps = tuple(max(c, p) for c, p in zip(caps, prev))
+            idle = all(
+                n <= p // 2 or p <= cap_floor
+                for n, p in zip(natural, prev)
+            )
+            if idle:
+                peak = self._cap_peak.get(cap_key, natural)
+                peak = tuple(max(a, b) for a, b in zip(peak, natural))
+                streak = self._cap_slack.get(cap_key, 0) + 1
+                if streak >= self.CAP_DECAY_CALLS:
+                    caps = tuple(max(c, cap_floor) for c in peak)
+                    self._cap_slack[cap_key] = 0
+                    self._cap_peak.pop(cap_key, None)
+                else:
+                    caps = prev
+                    self._cap_slack[cap_key] = streak
+                    self._cap_peak[cap_key] = peak
+            else:
+                caps = tuple(max(c, p) for c, p in zip(natural, prev))
+                self._cap_slack[cap_key] = 0
+                self._cap_peak.pop(cap_key, None)
         self._cap_hwm[cap_key] = caps
         width = int(sum(caps))
         self._turn[(b_bucket, width)] = self._turn.get((b_bucket, n_bucket), 0)
@@ -403,20 +466,21 @@ class EventStager:
             n = ev.n if ev is not None else 0
             if n:
                 if np.all(ev.t_ns[1:] >= ev.t_ns[:-1]):
-                    t, pool, nbytes, weight, host = (
-                        ev.t_ns, ev.pool, ev.bytes_, ev.weight, ev.host
+                    t, pool, nbytes, weight, host, qos = (
+                        ev.t_ns, ev.pool, ev.bytes_, ev.weight, ev.host, ev.qos
                     )
                 else:
                     order = np.argsort(ev.t_ns, kind="stable")
-                    t, pool, nbytes, weight, host = (
+                    t, pool, nbytes, weight, host, qos = (
                         ev.t_ns[order], ev.pool[order], ev.bytes_[order],
-                        ev.weight[order], ev.host[order],
+                        ev.weight[order], ev.host[order], ev.qos[order],
                     )
                 buf["t"][row, :n] = t
                 buf["pool"][row, :n] = pool
                 buf["bytes"][row, :n] = nbytes
                 buf["weight"][row, :n] = weight
                 buf["host"][row, :n] = host
+                buf["qos"][row, :n] = qos
                 buf["valid"][row, :n] = True
                 buf["span"][row] = float(t[-1]) + 1.0
             else:
@@ -426,6 +490,7 @@ class EventStager:
             buf["bytes"][row, n:] = 0.0
             buf["weight"][row, n:] = 0.0
             buf["host"][row, n:] = 0
+            buf["qos"][row, n:] = 0
             buf["valid"][row, n:] = False
 
     def stack_buffers(
@@ -568,11 +633,15 @@ def synthetic_trace(
     write_frac: float = 0.3,
     seed: int = 0,
     burstiness: float = 0.0,
+    n_qos_classes: int = 1,
+    qos_probs: Optional[Sequence[float]] = None,
 ) -> MemEvents:
     """Random trace generator used by tests and the microbenchmark suite.
 
     ``burstiness`` in [0, 1): 0 => uniform issue times; near 1 => events
     clustered into bursts (stress for congestion/bandwidth modelling).
+    ``n_qos_classes`` > 1 tags events with random QoS classes
+    (``qos_probs`` weights the draw; uniform by default).
     """
     rng = np.random.default_rng(seed)
     if pool_probs is None:
@@ -588,10 +657,21 @@ def synthetic_trace(
         t = np.clip(t, 0, epoch_ns)
     else:
         t = rng.uniform(0, epoch_ns, size=n_events)
+    if n_qos_classes > 1:
+        qp = (
+            np.asarray(qos_probs, np.float64)
+            if qos_probs is not None
+            else np.full((n_qos_classes,), 1.0 / n_qos_classes)
+        )
+        qos = rng.choice(n_qos_classes, size=n_events, p=qp / qp.sum())
+        qos = qos.astype(np.int32)
+    else:
+        qos = np.zeros((n_events,), np.int32)
     return MemEvents(
         t_ns=np.sort(t),
         pool=rng.choice(n_pools, size=n_events, p=pool_probs).astype(np.int32),
         bytes_=np.full((n_events,), float(granule_bytes)),
         is_write=rng.random(n_events) < write_frac,
         region=np.zeros((n_events,), np.int32),
+        qos=qos,
     )

@@ -93,6 +93,7 @@ class Tenant:
     step_args: Tuple = ()
     calibration: float = 1.0
     sample_rate: float = 1.0
+    qos_class: int = 0  # arbitration class at QoS-disciplined switches
 
 
 @dataclasses.dataclass
@@ -157,13 +158,25 @@ class FabricReport:
     compute_s: float = 0.0
     donated_dispatches: int = 0
     aot_cache_hits: int = 0
+    qos_classes: int = 1
     per_pool_latency_ns: Optional[np.ndarray] = None
     per_switch_congestion_ns: Optional[np.ndarray] = None
     per_switch_bandwidth_ns: Optional[np.ndarray] = None
+    per_class_congestion_ns: Optional[np.ndarray] = None
 
     @property
     def delay_s(self) -> float:
         return self.latency_s + self.congestion_s + self.bandwidth_s + self.coherency_s
+
+    def qos_delay_shares(self) -> List[float]:
+        """Fraction of switch queueing delay charged to each QoS class."""
+        pcc = self.per_class_congestion_ns
+        if pcc is None:
+            return [1.0]
+        total = float(pcc.sum())
+        if total <= 0.0:
+            return [0.0] * len(pcc)
+        return [float(x) / total for x in pcc]
 
     def summary(self) -> Dict[str, float]:
         """Fabric-wide scalars + per-host clocks — the full report contract
@@ -191,6 +204,8 @@ class FabricReport:
             "compute_s": self.compute_s,
             "donated_dispatches": self.donated_dispatches,
             "aot_cache_hits": self.aot_cache_hits,
+            "qos_classes": self.qos_classes,
+            "qos_delay_shares": self.qos_delay_shares(),
         }
         for hc in self.hosts:
             out[f"host{hc.host}_native_s"] = hc.native_s
@@ -250,6 +265,7 @@ class FabricSession(EngineClient):
                 local_dram_latency_ns=topology.local_dram_latency_ns,
                 n_hosts=H,
                 host_ports=topology.host_ports or None,
+                n_qos_classes=topology.n_qos_classes,
             )
         self.topology = topology
         self.flat = topology.flatten()
@@ -274,6 +290,11 @@ class FabricSession(EngineClient):
         )
 
         for h, t in enumerate(self.tenants):
+            if not 0 <= t.qos_class < self.flat.n_qos_classes:
+                raise ValueError(
+                    f"tenant {t.name!r} declares qos_class={t.qos_class} but the "
+                    f"fabric has {self.flat.n_qos_classes} QoS class(es)"
+                )
             t.policy.place(t.regions, self.flat)
             for r in t.regions:
                 if not self.flat.host_reachable[h, r.pool]:
@@ -312,9 +333,11 @@ class FabricSession(EngineClient):
         self._round_cache: Optional[tuple] = None
         self._report = FabricReport(
             hosts=[HostClock(h, t.name) for h, t in enumerate(self.tenants)],
+            qos_classes=self.flat.n_qos_classes,
             per_pool_latency_ns=np.zeros((self.flat.n_pools,)),
             per_switch_congestion_ns=np.zeros((self.flat.n_switches,)),
             per_switch_bandwidth_ns=np.zeros((self.flat.n_switches,)),
+            per_class_congestion_ns=np.zeros((self.flat.n_qos_classes,)),
         )
         self._report_lock = threading.Lock()
         if async_analysis:
@@ -401,7 +424,7 @@ class FabricSession(EngineClient):
                 traces = [
                     tr.sample(t.sample_rate, seed=i) for i, tr in enumerate(traces)
                 ]
-            traces = [tr.with_host(h) for tr in traces]
+            traces = [tr.with_host(h).with_qos(t.qos_class) for tr in traces]
             if self._native_cache[h] is None:
                 # native pacing depends on phase flops/bytes only, never on
                 # residency, so it survives migration-forced re-synthesis
@@ -526,6 +549,12 @@ class FabricSession(EngineClient):
             r.per_pool_latency_ns += bd.per_pool_latency_ns
             r.per_switch_congestion_ns += bd.per_switch_congestion_ns
             r.per_switch_bandwidth_ns += bd.per_switch_bandwidth_ns
+            if bd.per_class_congestion_ns is not None:
+                pcc = np.asarray(bd.per_class_congestion_ns, np.float64)
+                if len(pcc) == len(r.per_class_congestion_ns):
+                    r.per_class_congestion_ns += pcc
+                else:  # qos-off breakdown on a multi-class fabric: all class 0
+                    r.per_class_congestion_ns[0] += float(pcc.sum())
             if self._handle is not None:
                 fold_dispatch_stats(
                     r, self._handle.last_dispatch, self._handle.last_group_size

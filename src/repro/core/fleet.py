@@ -63,7 +63,13 @@ from .analyzer import (
     plan_cascade,
 )
 from .events import EventStager, MemEvents, RegionMap, concat_events
-from .topology import Topology, TopologyOverride, flatten_stack, pooled_topology
+from .topology import (
+    QosSpec,
+    Topology,
+    TopologyOverride,
+    flatten_stack,
+    pooled_topology,
+)
 from .tracer import (
     Access,
     HardwareModel,
@@ -91,12 +97,14 @@ class TenantSpec:
 
     ``regions``' pool fields are ignored — the fleet scheduler decides
     placement.  Names must be unique within a fleet (they key the skeleton
-    cache and the per-tenant results).
+    cache and the per-tenant results).  ``qos_class`` is the tenant's
+    arbitration class at QoS-disciplined switches (priority / WFQ racks).
     """
 
     name: str
     phases: Tuple[Phase, ...]
     regions: RegionMap
+    qos_class: int = 0
 
     def demand_bytes(self) -> float:
         return float(self.regions.total_bytes())
@@ -189,6 +197,7 @@ class FleetReport:
     devices_used: int = 1
     shard_rows: int = 0
     padded_fraction: float = 0.0
+    qos_classes: int = 1
 
     @property
     def n_hosts(self) -> int:
@@ -227,6 +236,7 @@ class FleetReport:
             "devices_used": self.devices_used,
             "shard_rows": self.shard_rows,
             "padded_fraction": self.padded_fraction,
+            "qos_classes": self.qos_classes,
         }
 
 
@@ -269,6 +279,7 @@ class FleetSim:
         dtype=jnp.float32,
         mesh=None,
         offload_classes: Sequence[str] = ("opt_state", "kvcache", "expert"),
+        rack_qos: Optional[Sequence[Optional[QosSpec]]] = None,
     ):
         if n_racks < 1:
             raise ValueError("need at least one rack")
@@ -330,11 +341,35 @@ class FleetSim:
         self._route = jnp.asarray(flat.route, dtype)
         # numeric leaves, one row per rack (structure shared by construction)
         self._leaf_stack = flatten_stack(self.topology, self.rack_overrides)
+        # per-rack QoS arbitration policies: disciplines and class weights
+        # are NUMERIC leaves on the rack axis (same contract as the stt/bw
+        # overrides), so a heterogeneous-QoS fleet still compiles once
+        if rack_qos is not None and len(rack_qos) != self.n_racks:
+            raise ValueError(f"{len(rack_qos)} rack_qos entries for {n_racks} racks")
+        C = flat.n_qos_classes
+        if rack_qos is not None:
+            C = max([C] + [s.n_classes() for s in rack_qos if s is not None])
+        disc = np.tile(
+            np.asarray(flat.discipline_codes(), np.int32)[None], (self.n_racks, 1)
+        )
+        weights = np.ones((self.n_racks, flat.n_switches, C), self._np_dtype)
+        base_w = flat.class_weight_table().astype(self._np_dtype)
+        weights[:, :, : base_w.shape[1]] = base_w[None]
+        if rack_qos is not None:
+            for r, spec in enumerate(rack_qos):
+                if spec is not None:
+                    spec.apply(disc[r], weights[r], flat.switch_names)
+        self._disc_stack = disc
+        self._weights_stack = weights
+        self.n_qos_classes = C
+        self.qos_on = bool(flat.has_qos) or bool(
+            rack_qos is not None and any(s is not None for s in rack_qos)
+        )
         self._fleet_jit = jax.jit(
             _analyze_fleet_jax,
             static_argnames=(
                 "stage_order", "n_windows", "n_hosts", "impl", "fused",
-                "merge_plan",
+                "merge_plan", "qos_on",
             ),
         )
         self._stager = EventStager(self._np_dtype)
@@ -388,6 +423,12 @@ class FleetSim:
         names = [t.name for t in tenants]
         if len(set(names)) != len(names):
             raise ValueError("tenant names must be unique within a fleet")
+        for t in tenants:
+            if not 0 <= t.qos_class < self.n_qos_classes:
+                raise ValueError(
+                    f"tenant {t.name!r} declares qos_class={t.qos_class} but "
+                    f"the fleet has {self.n_qos_classes} QoS class(es)"
+                )
         R, H = self.n_racks, self.hosts_per_rack
         free_local = np.full((R, H), self.local_capacity)
         free_shared = np.full((R,), self.shared_capacity)
@@ -479,7 +520,7 @@ class FleetSim:
         for p in placements:
             sk = self._skeleton(p.tenant)
             epochs = [
-                tr.with_host(p.host)
+                tr.with_host(p.host).with_qos(p.tenant.qos_class)
                 for tr in skeleton_to_events(sk, p.pool_of_region)
             ]
             native[p.rack, p.host] += float(sum(sk.native_ns))
@@ -550,6 +591,7 @@ class FleetSim:
             put_k(buf["bytes"]),
             put_k(buf["weight"]),
             put_k(buf["host"]),
+            put_k(buf["qos"]),
             put_k(buf["valid"]),
             put_k(jnp.asarray(bw_window, self.dtype)),
             put_k(scale),
@@ -559,6 +601,8 @@ class FleetSim:
             put_r(self._route),
             put_k(pad_k(np.asarray(ls.switch_stt_ns, self._np_dtype))),
             put_k(pad_k(np.asarray(ls.switch_bandwidth_gbps, self._np_dtype))),
+            put_k(pad_k(self._disc_stack)),
+            put_k(pad_k(self._weights_stack)),
         )
         transfer_s = time.perf_counter() - t_put
         self.last_dispatch = DispatchStats(
@@ -568,6 +612,7 @@ class FleetSim:
             padded_fraction=float(k_bucket - K) / k_bucket,
             stage_s=stage_s,
             transfer_s=transfer_s,
+            qos_classes=self.n_qos_classes,
         )
         t_run = time.perf_counter()
         out = self._fleet_jit(
@@ -578,8 +623,9 @@ class FleetSim:
             impl="inline",
             fused=True,
             merge_plan=self._merge_plan,
+            qos_on=self.qos_on,
         )
-        lat, cong, bw, ppl, psc, psb, phl, phc, phb = jax.device_get(out)
+        lat, cong, bw, ppl, psc, psb, phl, phc, phb, pcc = jax.device_get(out)
         self.last_dispatch = dataclasses.replace(
             self.last_dispatch, compute_s=time.perf_counter() - t_run
         )
@@ -592,6 +638,7 @@ class FleetSim:
                 phl[k].astype(np.float64),
                 phc[k].astype(np.float64),
                 phb[k].astype(np.float64),
+                pcc[k].astype(np.float64),
             )
             for k in range(K)
         ]
@@ -621,6 +668,7 @@ class FleetSim:
             devices_used=self.last_dispatch.devices_used,
             shard_rows=self.last_dispatch.shard_rows,
             padded_fraction=self.last_dispatch.padded_fraction,
+            qos_classes=self.n_qos_classes,
         )
 
     def simulate(

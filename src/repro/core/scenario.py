@@ -54,7 +54,7 @@ from .analyzer import (
 from .cache import DeviceCacheConfig, DeviceCacheModel
 from .events import RegionMap
 from .policy import PlacementPolicy, RegionArrays, assign_batch, bytes_per_pool_batch
-from .topology import Topology, TopologyOverride, flatten_stack
+from .topology import QosSpec, Topology, TopologyOverride, flatten_stack
 from .tracer import (
     HardwareModel,
     Phase,
@@ -67,6 +67,17 @@ from .tracer import (
 __all__ = ["Scenario", "ScenarioSuite", "SweepResult"]
 
 
+def _class_shares(b: DelayBreakdown) -> List[float]:
+    """Per-QoS-class share of a breakdown's congestion delay."""
+    pcc = b.per_class_congestion_ns
+    if pcc is None:
+        return [1.0]
+    total = float(pcc.sum())
+    if total <= 0.0:
+        return [0.0] * len(pcc)
+    return [float(x) / total for x in pcc]
+
+
 @dataclasses.dataclass(frozen=True)
 class Scenario:
     """One point of a sweep: placement policy × topology numeric variant ×
@@ -77,6 +88,7 @@ class Scenario:
     policy: PlacementPolicy
     topology: Optional[TopologyOverride] = None
     cache: Optional[DeviceCacheConfig] = None
+    qos: Optional[QosSpec] = None
     name: str = ""
 
     def label(self) -> str:
@@ -86,6 +98,8 @@ class Scenario:
         parts.append(self.topology.describe() if self.topology else "base")
         if self.cache is not None:
             parts.append(f"cache={self.cache.capacity_bytes / 2**20:g}MiB")
+        if self.qos is not None:
+            parts.append(self.qos.describe())
         return "|".join(parts)
 
 
@@ -106,6 +120,7 @@ class SweepResult:
     stage_s: float = 0.0
     transfer_s: float = 0.0
     compute_s: float = 0.0
+    qos_classes: int = 1  # QoS class count of this run's dispatch
 
     @property
     def k(self) -> int:
@@ -172,6 +187,8 @@ class SweepResult:
                 "stage_s": self.stage_s,
                 "transfer_s": self.transfer_s,
                 "compute_s": self.compute_s,
+                "qos_classes": self.qos_classes,
+                "qos_delay_shares": _class_shares(b),
             }
             for i, (s, b) in enumerate(zip(self.scenarios, self.breakdowns))
         ]
@@ -206,7 +223,13 @@ class ScenarioSuite:
         n_windows: int = 128,
         dtype=jnp.float32,
         mesh=None,
+        region_qos: Optional[Mapping[str, int]] = None,
     ):
+        """``region_qos`` maps region names to QoS class ids (absent
+        regions default to class 0); with it — or a QoS-bearing topology,
+        or any scenario carrying a :class:`~repro.core.topology.QosSpec` —
+        the sweep routes congestion through the vectorized QoS arbitration
+        cascade and reports per-class delay shares."""
         self.topology = topology
         # a ('data',) mesh shards the scenario axis of every run() dispatch
         # (repro.launch.mesh.make_data_mesh); overridable per run
@@ -233,11 +256,20 @@ class ScenarioSuite:
         self._bits_table = jnp.asarray(bits_pool)
         self._route = jnp.asarray(self.base_flat.route, dtype)
         self.region_arrays = RegionArrays.from_regions(regions)
+        self._region_qos = {str(k): int(v) for k, v in (region_qos or {}).items()}
+        self._qos_of_region = np.asarray(
+            [self._region_qos.get(name, 0) for name in self.region_arrays.names],
+            np.int32,
+        )
+        if (self._qos_of_region < 0).any():
+            raise ValueError("region_qos classes must be >= 0")
         self._skeletons: Dict[float, TraceSkeleton] = {}
         self._staged: Dict[Tuple[float, int], Dict[str, np.ndarray]] = {}
         self._sweep_jit = jax.jit(
             _analyze_sweep_jax,
-            static_argnames=("stage_order", "n_windows", "n_hosts", "merge_plan"),
+            static_argnames=(
+                "stage_order", "n_windows", "n_hosts", "merge_plan", "qos_on",
+            ),
         )
         # count at the callable itself so EVERY sweep-kernel dispatch is
         # counted, whatever code path issues it (tests assert 1 per run)
@@ -453,16 +485,45 @@ class ScenarioSuite:
         # 3. stacked topology leaves (structure shared -> one compiled graph)
         topo_stack = flatten_stack(self.topology, [s.topology for s in scenarios])
 
+        # 3a. the qos axis: per-scenario discipline/weight rows.  Disciplines
+        # are numeric data under the vectorized QoS cascade, so K
+        # discipline×weight mixes still compile ONE graph; qos_on itself is
+        # the only static bit, and all-FIFO suites keep the historical path.
+        qos_specs = [s.qos for s in scenarios]
+        qos_on = bool(
+            flat.has_qos
+            or self._qos_of_region.any()
+            or any(sp is not None for sp in qos_specs)
+        )
+        C = int(flat.n_qos_classes)
+        if qos_on:
+            C = max(
+                C,
+                int(self._qos_of_region.max(initial=0)) + 1,
+                max((sp.n_classes() for sp in qos_specs if sp), default=1),
+            )
+        disc_base = flat.discipline_codes()  # [S] i32
+        w_base = np.ones((S, C), self._np_dtype)
+        w_base[:, : flat.n_qos_classes] = flat.class_weight_table()
+        disc_np = np.tile(disc_base, (K, 1))
+        w_np = np.tile(w_base, (K, 1, 1))
+        for k, sp in enumerate(qos_specs):
+            if sp is not None:
+                sp.apply(disc_np[k], w_np[k], flat.switch_names)
+
         # 3b. cascade dedup: congestion (and the post-queue times bandwidth
         # windows see) depends only on (granularity group, placement row,
-        # STT row) — scenarios differing only in latency/bandwidth/cache
-        # share one cascade on device
+        # STT row — plus the discipline/weight rows when QoS is on) —
+        # scenarios differing only in latency/bandwidth/cache share one
+        # cascade on device
         stt_np = topo_stack.switch_stt_ns.astype(self._np_dtype)
         cas_index: Dict[Tuple, int] = {}
         cascade_of = np.empty((K,), np.int32)
         cas_rows: List[int] = []
         for k in range(K):
             ck = (int(group_of[k]), assign[k].tobytes(), stt_np[k].tobytes())
+            if qos_on:
+                ck += (disc_np[k].tobytes(), w_np[k].tobytes())
             u = cas_index.get(ck)
             if u is None:
                 u = len(cas_rows)
@@ -473,6 +534,8 @@ class ScenarioSuite:
         cas_group = group_of[cas_rows_np]
         cas_assign = assign[cas_rows_np]
         cas_stt = stt_np[cas_rows_np]
+        cas_disc = disc_np[cas_rows_np]
+        cas_weights = w_np[cas_rows_np]
         self.last_unique_cascades = len(cas_rows)
 
         # 4. per-scenario device-cache latency scales (host-side tag model),
@@ -543,7 +606,12 @@ class ScenarioSuite:
         stage_s = time.perf_counter() - t0
         t0 = time.perf_counter()
         dev_r = [put_r(jnp.asarray(a, fd) if a.dtype.kind == "f" else jnp.asarray(a)) for a in host_r]
-        dev_cas = [put_r(jnp.asarray(cas_group)), put_r(jnp.asarray(cas_assign)), put_r(jnp.asarray(cas_stt))]
+        dev_cas = [
+            put_r(jnp.asarray(cas_group)), put_r(jnp.asarray(cas_assign)),
+            put_r(jnp.asarray(cas_stt)), put_r(jnp.asarray(cas_disc)),
+            put_r(jnp.asarray(cas_weights)),
+            put_r(jnp.asarray(self._qos_of_region)),
+        ]
         dev_k = [put_k(a) for a in host_k]
         transfer_s = time.perf_counter() - t0
         self.last_dispatch = DispatchStats(
@@ -553,6 +621,7 @@ class ScenarioSuite:
             padded_fraction=float(Kp - K) / Kp,
             stage_s=stage_s,
             transfer_s=transfer_s,
+            qos_classes=C,
         )
         t0 = time.perf_counter()
         out = self._sweep_fn(
@@ -565,8 +634,9 @@ class ScenarioSuite:
             n_windows=self.n_windows,
             n_hosts=H,
             merge_plan=self._merge_plan,
+            qos_on=qos_on,
         )
-        lat, cong, bw, ppl, psc, psb, phl, phc, phb = jax.device_get(out)
+        lat, cong, bw, ppl, psc, psb, phl, phc, phb, pcc = jax.device_get(out)
         self.last_dispatch = dataclasses.replace(
             self.last_dispatch, compute_s=time.perf_counter() - t0
         )
@@ -579,6 +649,7 @@ class ScenarioSuite:
                 phl[k].astype(np.float64),
                 phc[k].astype(np.float64),
                 phb[k].astype(np.float64),
+                pcc[k].astype(np.float64),
             )
             for k in range(K)
         ]
@@ -595,6 +666,7 @@ class ScenarioSuite:
             stage_s=self.last_dispatch.stage_s,
             transfer_s=self.last_dispatch.transfer_s,
             compute_s=self.last_dispatch.compute_s,
+            qos_classes=C,
         )
 
     # ------------------------------------------------------------------ #

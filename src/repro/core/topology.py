@@ -32,7 +32,10 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 __all__ = [
+    "DISCIPLINES",
+    "DISCIPLINE_CODES",
     "Pool",
+    "QosSpec",
     "Switch",
     "Topology",
     "TopologyOverride",
@@ -46,6 +49,85 @@ __all__ = [
     "two_tier_topology",
 ]
 
+# queue disciplines a switch's arbiter can run; codes are the traced-integer
+# encoding the vectorized QoS cascade consumes (DESIGN.md §QoS arbitration)
+DISCIPLINES: Tuple[str, ...] = ("fifo", "priority", "wfq")
+DISCIPLINE_CODES: Dict[str, int] = {d: i for i, d in enumerate(DISCIPLINES)}
+
+
+@dataclasses.dataclass(frozen=True)
+class QosSpec:
+    """A hashable QoS arbitration policy — one value of a sweep's ``qos``
+    axis, applied on top of a topology's own per-switch settings.
+
+    ``discipline``/``class_weights`` set every switch; ``switch_disciplines``
+    / ``switch_weights`` override individual switches by name (a bare name
+    also matches its ECMP replicas ``name@r``).  Disciplines and weights are
+    *numeric data* under the vectorized QoS cascade, so scenarios differing
+    only in a :class:`QosSpec` share one compiled graph.
+    """
+
+    discipline: Optional[str] = None
+    class_weights: Optional[Tuple[float, ...]] = None
+    switch_disciplines: Tuple[Tuple[str, str], ...] = ()
+    switch_weights: Tuple[Tuple[str, Tuple[float, ...]], ...] = ()
+
+    def __post_init__(self) -> None:
+        for d in (self.discipline, *(d for _, d in self.switch_disciplines)):
+            if d is not None and d not in DISCIPLINE_CODES:
+                raise ValueError(f"unknown discipline {d!r} (use {DISCIPLINES})")
+        for w in (self.class_weights, *(w for _, w in self.switch_weights)):
+            if w is not None and (len(w) == 0 or any(x <= 0 for x in w)):
+                raise ValueError("class weights must be non-empty and positive")
+
+    def n_classes(self) -> int:
+        n = len(self.class_weights) if self.class_weights else 1
+        for _, w in self.switch_weights:
+            n = max(n, len(w))
+        return n
+
+    def apply(
+        self,
+        disc_row: np.ndarray,  # [S] i32, mutated in place
+        w_row: np.ndarray,  # [S, C] float, mutated in place
+        switch_names: Sequence[str],
+    ) -> None:
+        base = [n.split("@")[0] for n in switch_names]
+
+        def select(name: str) -> List[int]:
+            sel = [
+                i for i, b in enumerate(base)
+                if b == name or switch_names[i] == name
+            ]
+            if not sel:
+                raise ValueError(f"QosSpec names unknown switch {name!r}")
+            return sel
+
+        if self.discipline is not None:
+            disc_row[:] = DISCIPLINE_CODES[self.discipline]
+        if self.class_weights is not None:
+            w = np.asarray(self.class_weights, w_row.dtype)
+            w_row[:, : len(w)] = w
+        for name, d in self.switch_disciplines:
+            disc_row[select(name)] = DISCIPLINE_CODES[d]
+        for name, ws in self.switch_weights:
+            w_row[np.ix_(select(name), range(len(ws)))] = np.asarray(
+                ws, w_row.dtype
+            )
+
+    def describe(self) -> str:
+        parts = []
+        if self.discipline is not None:
+            parts.append(self.discipline)
+        if self.class_weights is not None:
+            parts.append(":".join(f"{w:g}" for w in self.class_weights))
+        parts += [f"{n}={d}" for n, d in self.switch_disciplines]
+        parts += [
+            f"{n}={':'.join(f'{x:g}' for x in ws)}"
+            for n, ws in self.switch_weights
+        ]
+        return "qos[" + ",".join(parts or ["base"]) + "]"
+
 
 @dataclasses.dataclass(frozen=True)
 class Switch:
@@ -56,6 +138,15 @@ class Switch:
     bandwidth_gbps: float  # GB/s through the switch
     stt_ns: float  # serial transmission time (min gap between transactions)
     parent: Optional[str] = None  # parent switch name; None => attached to RC
+    # QoS arbitration: 'fifo' (arrival order), 'priority' (strict, class 0
+    # highest), or 'wfq' (weighted fair, per-class virtual finish times)
+    discipline: str = "fifo"
+    # per-QoS-class weights ('wfq' only; None = equal); length must equal the
+    # topology's n_qos_classes
+    class_weights: Optional[Tuple[float, ...]] = None
+    # ECMP-style multipath: lower this switch to ``multipath`` parallel route
+    # columns; each (host, pool) flow deterministically picks one replica
+    multipath: int = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +178,7 @@ class Topology:
         local_dram_latency_ns: float = 88.9,  # paper's measured platform latency
         n_hosts: int = 1,
         host_ports: Optional[Mapping[int, Sequence[str]]] = None,
+        n_qos_classes: Optional[int] = None,  # None: derive from class_weights
     ) -> None:
         self.pools: List[Pool] = list(pools)
         self.switches: List[Switch] = list(switches)
@@ -95,6 +187,11 @@ class Topology:
         self.rc_stt_ns = float(rc_stt_ns)
         self.local_dram_latency_ns = float(local_dram_latency_ns)
         self.n_hosts = int(n_hosts)
+        derived = max(
+            (len(s.class_weights) for s in self.switches if s.class_weights),
+            default=1,
+        )
+        self.n_qos_classes = derived if n_qos_classes is None else int(n_qos_classes)
         # host -> top-level component names (parentless switches/pools) the
         # host's RC is attached to; hosts absent from the map see everything
         self.host_ports: Dict[int, Tuple[str, ...]] = {
@@ -135,6 +232,26 @@ class Topology:
                 cur = self._switch_by_name[cur].parent
         if self.n_hosts < 1:
             raise ValueError("n_hosts must be >= 1")
+        if self.n_qos_classes < 1:
+            raise ValueError("n_qos_classes must be >= 1")
+        for s in self.switches:
+            if s.discipline not in DISCIPLINES:
+                raise ValueError(
+                    f"switch {s.name}: unknown discipline {s.discipline!r} "
+                    f"(one of {DISCIPLINES})"
+                )
+            if s.multipath < 1:
+                raise ValueError(f"switch {s.name}: multipath must be >= 1")
+            if s.class_weights is not None:
+                if len(s.class_weights) != self.n_qos_classes:
+                    raise ValueError(
+                        f"switch {s.name}: {len(s.class_weights)} class "
+                        f"weights for {self.n_qos_classes} QoS classes"
+                    )
+                if any(w <= 0 for w in s.class_weights):
+                    raise ValueError(
+                        f"switch {s.name}: class weights must be > 0"
+                    )
         top_level = {s.name for s in self.switches if s.parent is None} | {
             p.name for p in self.pools if p.parent is None and not p.is_local
         }
@@ -277,6 +394,13 @@ class FlatTopology:
     n_hosts: int = 1
     # host_reachable[H, P]: False where the host's ports exclude the pool
     host_reachable: Optional[np.ndarray] = None
+    # QoS arbitration (empty/None => every stage is a plain FIFO):
+    # per-column queue discipline (ECMP replicas and RCs included) ...
+    switch_discipline: Tuple[str, ...] = ()
+    # ... per-column class weights [S, C] (wfq rows; ones elsewhere) ...
+    qos_class_weights: Optional[np.ndarray] = None
+    # ... and the class count every weight row shares
+    n_qos_classes: int = 1
 
     @property
     def n_vpools(self) -> int:
@@ -290,19 +414,51 @@ class FlatTopology:
         """Switch indices ordered deepest-first (RCs last)."""
         return np.argsort(-self.switch_depth, kind="stable")
 
+    @property
+    def has_qos(self) -> bool:
+        """True when any stage arbitrates (non-FIFO) or classes exist."""
+        return self.n_qos_classes > 1 or any(
+            d != "fifo" for d in self.switch_discipline
+        )
+
+    def discipline_codes(self) -> np.ndarray:
+        """[S] int32 discipline codes (``DISCIPLINE_CODES``; all-FIFO when
+        the topology declares no disciplines)."""
+        if not self.switch_discipline:
+            return np.zeros((self.n_switches,), np.int32)
+        return np.array(
+            [DISCIPLINE_CODES[d] for d in self.switch_discipline], np.int32
+        )
+
+    def class_weight_table(self) -> np.ndarray:
+        """[S, C] per-stage class weights (ones where undeclared)."""
+        if self.qos_class_weights is None:
+            return np.ones((self.n_switches, self.n_qos_classes), np.float64)
+        return self.qos_class_weights
+
     @staticmethod
     def from_topology(t: Topology) -> "FlatTopology":
         P = len(t.pools)
         H = t.n_hosts
-        n_sw = len(t.switches)
+        # ECMP expansion: a multipath-m switch lowers to m route columns
+        # (replicas share every numeric parameter; names 'sw', 'sw@1', ...)
+        rep_src = _multipath_columns(t.switches)
+        n_sw = len(rep_src)
+        col_of: Dict[Tuple[str, int], int] = {}
+        exp_names: List[str] = []
+        for col, i in enumerate(rep_src):
+            s = t.switches[i]
+            r = len([c for c in rep_src[:col] if c == i])
+            col_of[(s.name, r)] = col
+            exp_names.append(s.name if r == 0 else f"{s.name}@{r}")
         S = n_sw + H  # + one RC pseudo-switch per host
+        C = t.n_qos_classes
         pool_lat = np.zeros((H * P,), np.float64)
         pool_bw = np.zeros((H * P,), np.float64)
         pool_cap = np.zeros((P,), np.float64)
         pool_media = np.array([p.latency_ns for p in t.pools], np.float64)
         route = np.zeros((H * P, S), np.float64)
         reach = np.ones((H, P), bool)
-        sw_index = {s.name: i for i, s in enumerate(t.switches)}
         for i, p in enumerate(t.pools):
             pool_cap[i] = p.capacity_bytes
             for h in range(H):
@@ -316,12 +472,14 @@ class FlatTopology:
                     continue  # no route: the host's ports exclude this pool
                 route[vp, n_sw + h] = 1.0  # the host's private RC
                 for sw in t.switch_path(p):
-                    route[vp, sw_index[sw.name]] = 1.0
+                    # each flow hashes onto one replica of a multipath switch
+                    route[vp, col_of[(sw.name, vp % max(1, sw.multipath))]] = 1.0
+        exp_sw = [t.switches[i] for i in rep_src]
         stt = np.array(
-            [s.stt_ns for s in t.switches] + [t.rc_stt_ns] * H, np.float64
+            [s.stt_ns for s in exp_sw] + [t.rc_stt_ns] * H, np.float64
         )
         sw_bw = np.array(
-            [s.bandwidth_gbps for s in t.switches] + [t.rc_bandwidth_gbps] * H,
+            [s.bandwidth_gbps for s in exp_sw] + [t.rc_bandwidth_gbps] * H,
             np.float64,
         )
 
@@ -333,8 +491,13 @@ class FlatTopology:
                 cur = t._switch_by_name[cur].parent
             return d
 
-        sw_depth = np.array([depth(s) for s in t.switches] + [0] * H, np.int32)
+        sw_depth = np.array([depth(s) for s in exp_sw] + [0] * H, np.int32)
         rc_names = ("RC",) if H == 1 else tuple(f"RC{h}" for h in range(H))
+        disc = tuple(s.discipline for s in exp_sw) + ("fifo",) * H
+        weights = np.ones((S, C), np.float64)
+        for col, s in enumerate(exp_sw):
+            if s.class_weights is not None:
+                weights[col] = s.class_weights
         return FlatTopology(
             n_pools=P,
             n_switches=S,
@@ -348,10 +511,26 @@ class FlatTopology:
             switch_bandwidth_gbps=sw_bw,
             switch_depth=sw_depth,
             pool_names=tuple(p.name for p in t.pools),
-            switch_names=tuple(s.name for s in t.switches) + rc_names,
+            switch_names=tuple(exp_names) + rc_names,
             n_hosts=H,
             host_reachable=reach,
+            switch_discipline=disc,
+            qos_class_weights=weights,
+            n_qos_classes=C,
         )
+
+
+def _multipath_columns(switches: Sequence[Switch]) -> List[int]:
+    """Expanded-column -> original-switch index for the ECMP lowering.
+
+    Replicas of switch ``i`` occupy consecutive columns; the same layout is
+    used by :meth:`FlatTopology.from_topology` and :func:`flatten_stack`, so
+    per-column numeric leaves always line up with the route matrix.
+    """
+    src: List[int] = []
+    for i, s in enumerate(switches):
+        src.extend([i] * max(1, int(s.multipath)))
+    return src
 
 
 # --------------------------------------------------------------------------- #
@@ -546,8 +725,11 @@ def flatten_stack(
         pool_leaf_bw,
     )
 
-    # expand to virtual (host, pool) rows and append per-host RC columns —
+    # expand to virtual (host, pool) rows, duplicate multipath replica
+    # columns (replicas share their switch's numbers, so overriding the
+    # switch overrides every replica), and append per-host RC columns —
     # the same layout FlatTopology.from_topology emits
+    rep_src = _multipath_columns(t.switches)
     return FlatTopologyStack(
         base=base_flat,
         pool_latency_ns=np.tile(pool_lat, (1, H)),
@@ -555,10 +737,10 @@ def flatten_stack(
         pool_media_latency_ns=pool_media,
         local_latency_ns=local_lat,
         switch_stt_ns=np.concatenate(
-            [sw_stt, np.repeat(rc_stt[:, None], H, axis=1)], axis=1
+            [sw_stt[:, rep_src], np.repeat(rc_stt[:, None], H, axis=1)], axis=1
         ),
         switch_bandwidth_gbps=np.concatenate(
-            [sw_bw, np.repeat(rc_bw[:, None], H, axis=1)], axis=1
+            [sw_bw[:, rep_src], np.repeat(rc_bw[:, None], H, axis=1)], axis=1
         ),
     )
 
@@ -680,14 +862,20 @@ def pooled_topology(
     cxl_capacity_gib: float = 1024.0,
     switch_stt_ns: float = 2.0,
     host_ports: Optional[Mapping[int, Sequence[str]]] = None,
+    discipline: str = "fifo",
+    class_weights: Optional[Sequence[float]] = None,
+    multipath: int = 1,
 ) -> Topology:
     """The paper's pooling scenario: N hosts sharing one CXL expander.
 
     Each host keeps its private local DRAM (pool 0) and private RC; the
     expander and its switch are shared fabric components, so co-attached
     hosts contend there.  This is the canonical noisy-neighbor /
-    memory-stranding topology.
+    memory-stranding topology.  ``discipline``/``class_weights`` set the
+    shared switch's QoS arbitration policy (the per-rack policy knob);
+    ``multipath`` lowers it to that many ECMP route columns.
     """
+    weights = tuple(class_weights) if class_weights is not None else None
     return Topology(
         pools=[
             Pool("local_dram", 88.9, 76.8, int(96 * 2**30), is_local=True),
@@ -705,6 +893,9 @@ def pooled_topology(
                 latency_ns=70.0,
                 bandwidth_gbps=cxl_bandwidth_gbps,
                 stt_ns=switch_stt_ns,
+                discipline=discipline,
+                class_weights=weights,
+                multipath=multipath,
             )
         ],
         n_hosts=n_hosts,

@@ -68,6 +68,7 @@ __all__ = [
     "congestion_cascade",
     "congestion_cascade_hosts",
     "congestion_scan",
+    "qos_congestion_cascade",
     "DEFAULT_BLOCK",
 ]
 
@@ -401,3 +402,198 @@ def congestion_cascade_hosts(
         interpret=interpret,
     )(t2, bits2, host2, stt_arr)
     return t_fin[0, :n], idx[0, :n], delay[0, :].reshape(n_stages, n_hosts)
+
+
+# --------------------------------------------------------------------------- #
+# QoS-arbitrated cascade (per-class SMEM carries)
+# --------------------------------------------------------------------------- #
+
+
+def _qos_cascade_body(n_classes, *refs):
+    """One (stage, block) step of the QoS-arbitrated cascade.
+
+    Extends :func:`_cascade_body` with per-QoS-class state, in the
+    data-driven formulation of :func:`repro.kernels.ref.qos_cascade_dyn`:
+    disciplines and class weights are runtime scalars read per stage, so one
+    lowering serves every discipline/weight mix.  Each stage runs ``C``
+    masked scans over the block — class ``c``'s selector is ``q_eff <= c``
+    under strict priority and ``q_eff == c`` otherwise, with WFQ inflating
+    the service time to ``stt·W/w_c`` — and each scan owns a (cummax, rank)
+    carry pair so the inter-block chaining of the FIFO kernel carries over
+    per class unchanged.
+
+    Ref layout (inputs, outputs, scratch):
+      t_ref     (1, B) time-sorted arrival tile (read at stage 0 only)
+      bits_ref  (1, B) per-event route bits (stage s <-> bit s)
+      qos_ref   (1, B) per-event QoS class ids (read at stage 0 only)
+      stt_ref   (S,)   service times in stage order
+      disc_ref  (S,)   i32 discipline codes (ref.DISC_*)
+      w_ref     (S, C) f32 per-stage class weights
+      tout_ref  (1, N) final post-congestion times (sorted slot order)
+      idx_ref   (1, N) slot -> original sorted position
+      delay_ref (1, C) per-stage per-class delay row, block s of the output
+      t_buf     VMEM (1, N) current times, kept sorted across stages
+      bits_buf  VMEM (1, N) route bits, permuted alongside t_buf
+      idx_buf   VMEM (1, N) original sorted position, permuted alongside
+      qos_buf   VMEM (1, N) QoS classes, permuted alongside
+      carry_ref SMEM f32[3C + 1]: [c]=class cummax, [C + c]=class rank,
+                [2C + c]=class delay sum, [3C]=stage delay (merge guard)
+    """
+    (t_ref, bits_ref, qos_ref, stt_ref, disc_ref, w_ref, tout_ref, idx_ref,
+     delay_ref, t_buf, bits_buf, idx_buf, qos_buf, carry_ref) = refs
+    s = pl.program_id(0)
+    b = pl.program_id(1)
+    nb = pl.num_programs(1)
+    n_stages = pl.num_programs(0)
+    block = t_ref.shape[1]
+    off = b * block
+
+    @pl.when(s == 0)
+    def _load():
+        t_buf[0, pl.ds(off, block)] = t_ref[0, :]
+        bits_buf[0, pl.ds(off, block)] = bits_ref[0, :]
+        qos_buf[0, pl.ds(off, block)] = qos_ref[0, :]
+        iota = jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+        idx_buf[0, pl.ds(off, block)] = iota[0, :] + off
+
+    @pl.when(b == 0)
+    def _reset_stage_carries():
+        for c in range(n_classes):
+            carry_ref[c] = _NEG
+            carry_ref[n_classes + c] = 0.0
+            carry_ref[2 * n_classes + c] = 0.0
+        carry_ref[3 * n_classes] = 0.0
+
+    t = t_buf[0, pl.ds(off, block)]
+    bits = bits_buf[0, pl.ds(off, block)]
+    qv = qos_buf[0, pl.ds(off, block)]
+    m = (jnp.right_shift(bits, s) & 1) == 1
+    stt = stt_ref[s]
+    disc = disc_ref[s]
+    w_total = jnp.zeros((), t.dtype)
+    for c in range(n_classes):
+        w_total = w_total + w_ref[s, c]
+    q_eff = jnp.where(disc == _ref.DISC_FIFO, 0, qv)
+
+    start = t
+    for c in range(n_classes):
+        sel = jnp.where(disc == _ref.DISC_PRIORITY, q_eff <= c, q_eff == c)
+        stt_c = jnp.where(
+            disc == _ref.DISC_WFQ, stt * w_total / w_ref[s, c], stt
+        )
+        M = m & sel
+        mf = M.astype(t.dtype)
+        rank = (jnp.cumsum(mf) - 1.0) + carry_ref[n_classes + c]
+        g = jnp.where(M, t - stt_c * rank, _NEG)
+        f_local = jax.lax.cummax(g)
+        f = jnp.maximum(f_local, carry_ref[c])
+        start = jnp.where(m & (q_eff == c), f + stt_c * rank, start)
+        carry_ref[c] = jnp.maximum(carry_ref[c], f_local[-1])
+        carry_ref[n_classes + c] = carry_ref[n_classes + c] + jnp.sum(mf)
+
+    d = jnp.where(m, start - t, 0.0)
+    t_buf[0, pl.ds(off, block)] = start
+    for c in range(n_classes):
+        # attribution uses the event's *actual* class, even under FIFO
+        carry_ref[2 * n_classes + c] = carry_ref[2 * n_classes + c] + jnp.sum(
+            jnp.where(qv == c, d, 0.0)
+        )
+    carry_ref[3 * n_classes] = carry_ref[3 * n_classes] + jnp.sum(d)
+
+    @pl.when(b == nb - 1)
+    def _finish_stage():
+        for c in range(n_classes):
+            delay_ref[0, c] = carry_ref[2 * n_classes + c]
+
+        @pl.when((s < n_stages - 1) & (carry_ref[3 * n_classes] > 0))
+        def _merge():
+            # Up to C + 1 interleaved sorted runs after the per-class scans;
+            # fold class by class (ref._qos_fold's schedule) — under FIFO
+            # q_eff = 0 makes step 0 the full two-run merge and the rest
+            # identity permutations.
+            x = t_buf[0, :]
+            bt = bits_buf[0, :]
+            ix = idx_buf[0, :]
+            qr = qos_buf[0, :]
+            for c in range(n_classes):
+                m_cur = (jnp.right_shift(bt, s) & 1) == 1
+                q_f = jnp.where(disc == _ref.DISC_FIFO, 0, qr)
+                changed = m_cur & (q_f == c)
+                within = ~(m_cur & (q_f > c))
+                x, bt, ix, qr = _ref.merge_sorted_runs(
+                    x, changed, bt, ix, qr, within=within
+                )
+            t_buf[0, :] = x
+            bits_buf[0, :] = bt
+            idx_buf[0, :] = ix
+            qos_buf[0, :] = qr
+
+        @pl.when(s == n_stages - 1)
+        def _write_out():
+            tout_ref[0, :] = t_buf[0, :]
+            idx_ref[0, :] = idx_buf[0, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def qos_congestion_cascade(
+    t_sorted: jnp.ndarray,  # [N] f32, globally time-sorted arrivals
+    route_bits: jnp.ndarray,  # [N] i32, bit s set iff event traverses stage s
+    qos: jnp.ndarray,  # [N] i32 QoS class ids, same sorted order
+    stts: jnp.ndarray,  # [S] f32, service times in stage order
+    disc_code: jnp.ndarray,  # [S] i32 discipline codes (ref.DISC_*)
+    class_weights: jnp.ndarray,  # [S, C] f32 per-stage class weights
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+):
+    """Fused QoS-arbitrated cascade in a single kernel launch.
+
+    Returns ``(t_final[N], slot_idx[N], per_stage_delay[S, C])`` matching
+    :func:`repro.kernels.ref.qos_cascade_dyn` (single-host form): per-stage
+    queueing delay decomposed by the QoS class whose event waited, under
+    runtime per-switch disciplines and class weights.
+    """
+    n = t_sorted.shape[0]
+    n_stages = int(stts.shape[0])
+    n_classes = int(class_weights.shape[1])
+    t_sorted, route_bits, qos = _pad_to_block(block, t_sorted, route_bits, qos)
+    npad = t_sorted.shape[0]
+    nb = npad // block
+
+    t2 = t_sorted.reshape(1, npad)
+    bits2 = route_bits.astype(jnp.int32).reshape(1, npad)
+    qos2 = jnp.clip(qos.astype(jnp.int32), 0, n_classes - 1).reshape(1, npad)
+    stt_arr = jnp.asarray(stts, t_sorted.dtype)
+    disc_arr = jnp.asarray(disc_code, jnp.int32)
+    w_arr = jnp.asarray(class_weights, t_sorted.dtype)
+
+    t_fin, idx, delay = pl.pallas_call(
+        functools.partial(_qos_cascade_body, n_classes),
+        grid=(n_stages, nb),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda s, b: (0, b)),  # arrival tile
+            pl.BlockSpec((1, block), lambda s, b: (0, b)),  # route-bit tile
+            pl.BlockSpec((1, block), lambda s, b: (0, b)),  # qos tile
+            pl.BlockSpec(memory_space=pl.ANY),  # stts vector
+            pl.BlockSpec(memory_space=pl.ANY),  # discipline codes
+            pl.BlockSpec(memory_space=pl.ANY),  # class-weight table
+        ],
+        out_specs=[
+            pl.BlockSpec((1, npad), lambda s, b: (0, 0)),  # t_final row
+            pl.BlockSpec((1, npad), lambda s, b: (0, 0)),  # slot idx row
+            pl.BlockSpec((1, n_classes), lambda s, b: (0, s)),  # stage row
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, npad), t_sorted.dtype),
+            jax.ShapeDtypeStruct((1, npad), jnp.int32),
+            jax.ShapeDtypeStruct((1, n_stages * n_classes), t_sorted.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, npad), t_sorted.dtype),
+            pltpu.VMEM((1, npad), jnp.int32),
+            pltpu.VMEM((1, npad), jnp.int32),
+            pltpu.VMEM((1, npad), jnp.int32),
+            pltpu.SMEM((3 * n_classes + 1,), t_sorted.dtype),
+        ],
+        interpret=interpret,
+    )(t2, bits2, qos2, stt_arr, disc_arr, w_arr)
+    return t_fin[0, :n], idx[0, :n], delay[0, :].reshape(n_stages, n_classes)

@@ -24,6 +24,7 @@ from . import ref
 from .congestion import congestion_cascade as _cascade_pallas
 from .congestion import congestion_cascade_hosts as _cascade_hosts_pallas
 from .congestion import congestion_scan as _congestion_pallas
+from .congestion import qos_congestion_cascade as _qos_cascade_pallas
 from .flash_attention import flash_attention as _flash_pallas
 from .ssd_scan import ssd_scan as _ssd_pallas
 
@@ -33,6 +34,7 @@ __all__ = [
     "congestion_cascade",
     "congestion_queue",
     "get_implementation",
+    "qos_congestion_cascade",
     "set_implementation",
     "ssd",
     "staging_sort",
@@ -168,6 +170,43 @@ def congestion_cascade(
         t_sorted, route_bits, hosts, stts, n_hosts=n_hosts, block=block,
         interpret=(i == "pallas_interpret"),
     )
+
+
+def qos_congestion_cascade(
+    t_sorted: jnp.ndarray,
+    route_bits: jnp.ndarray,
+    stts: jnp.ndarray,
+    qos: jnp.ndarray,
+    disc_code: jnp.ndarray,
+    class_weights: jnp.ndarray,
+    impl: Optional[str] = None,
+    block: int = 2048,
+    hosts: Optional[jnp.ndarray] = None,
+    n_hosts: int = 1,
+):
+    """QoS-arbitrated congestion cascade (priority / WFQ / FIFO per switch).
+
+    Data-driven form: ``disc_code`` ([S] i32, :data:`repro.kernels.ref.DISC_FIFO`
+    etc.) and ``class_weights`` ([S, C] f32) are runtime arrays, so one
+    lowering serves every discipline/weight mix.  Returns ``(t_final,
+    slot_idx, per_stage_delay[S, n_hosts, C])``; see
+    :func:`repro.kernels.ref.qos_cascade_dyn` for the semantics.
+
+    The Pallas kernel is single-host (its SMEM carries are per class); the
+    host-segmented decomposition routes to the ref, which the shared-fabric
+    analyzer uses anyway (``impl='inline'``).
+    """
+    i = _resolve(impl)
+    if i == "ref" or hosts is not None:
+        return ref.qos_cascade_dyn(
+            t_sorted, route_bits, stts, qos, disc_code, class_weights,
+            hosts=hosts, n_hosts=n_hosts,
+        )
+    t_fin, idx, delay = _qos_cascade_pallas(
+        t_sorted, route_bits, qos, stts, disc_code, class_weights,
+        block=block, interpret=(i == "pallas_interpret"),
+    )
+    return t_fin, idx, delay[:, None, :]
 
 
 def two_run_merge(x, lead, *payloads, impl: Optional[str] = None):

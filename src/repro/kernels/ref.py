@@ -13,6 +13,8 @@ import jax.numpy as jnp
 __all__ = [
     "chain_cascade",
     "merge_sorted_runs",
+    "qos_cascade_dyn",
+    "qos_serial_queue_cascade",
     "serial_queue",
     "serial_queue_cascade",
     "staging_sort",
@@ -21,6 +23,10 @@ __all__ = [
     "ssd_naive",
     "ssd_chunked",
 ]
+
+# queue-discipline codes shared with ``topology.DISCIPLINE_CODES`` (kernels
+# do not import core; the mapping is part of the kernel ABI)
+DISC_FIFO, DISC_PRIORITY, DISC_WFQ = 0, 1, 2
 
 
 # --------------------------------------------------------------------------- #
@@ -360,6 +366,395 @@ def serial_queue_cascade(
             )
         dirty = dirty + dsum
         ts = jnp.where(m, start, ts)
+    return ts, idx, jnp.stack(per_stage)
+
+
+# --------------------------------------------------------------------------- #
+# QoS arbitration cascades
+# --------------------------------------------------------------------------- #
+
+
+def _class_scan(ts, M, stt_c, big):
+    """Serial-queue start times over the ``M`` subsequence with service time
+    ``stt_c`` — the shared primitive of every discipline's per-class scan.
+    Values are only meaningful at ``M`` positions."""
+    f32 = ts.dtype
+    rankf = (jnp.cumsum(M.astype(jnp.int32)) - 1).astype(f32)
+    g = jnp.where(M, ts - stt_c * rankf, -big)
+    f = jax.lax.cummax(g)
+    return f + stt_c * rankf
+
+
+def _qos_fold(ts, bits, idx, qos, s, n_classes, dirty, fifo_like):
+    """Restore sortedness after stage ``s``'s per-class scans.
+
+    A discipline's per-class scans leave up to ``C + 1`` interleaved sorted
+    runs: each class's start times are non-decreasing along its own
+    subsequence (a serial queue never reorders its arrivals), and the
+    unmasked events keep their previous order.  ``C`` sequential
+    :func:`merge_sorted_runs` calls fold the runs back together — step ``c``
+    merges class ``c``'s run *within* the subsequence that excludes the
+    not-yet-folded classes ``> c``, so every step is a true two-sorted-run
+    merge.  Masks are recomputed from the live permutation after each step.
+
+    ``fifo_like`` (static, or per-stage data under ``jnp.where`` in the
+    dynamic path) collapses the fold to the single conservative full merge
+    of :func:`serial_queue_cascade`: with every masked event in class 0 the
+    first step is the full two-run merge and the rest are identity
+    permutations.
+    """
+    for c in range(n_classes):
+        m_cur = (jnp.right_shift(bits, s) & 1) == 1
+        q_cur = jnp.take(qos, idx)
+        if fifo_like:
+            q_cur = jnp.zeros_like(q_cur)
+        changed = m_cur & (q_cur == c)
+        within = ~(m_cur & (q_cur > c))
+        args = (ts, bits, idx, changed, within)
+        ts, bits, idx = jax.lax.cond(
+            dirty > 0,
+            lambda a: merge_sorted_runs(a[0], a[3], a[1], a[2], within=a[4]),
+            lambda a: (a[0], a[1], a[2]),
+            args,
+        )
+    return ts, bits, idx
+
+
+def qos_serial_queue_cascade(
+    t_sorted: jnp.ndarray,  # [N] f32, globally time-sorted arrivals
+    route_bits: jnp.ndarray,  # [N] i32, bit s set iff event traverses stage s
+    stts: jnp.ndarray,  # [S] f32, service times in stage order
+    qos: jnp.ndarray,  # [N] i32 QoS class per event, in sorted order
+    class_weights: jnp.ndarray,  # [S, C] f32 per-stage WFQ class weights
+    disciplines,  # static: tuple of "fifo" | "priority" | "wfq", one per stage
+    merge_plan=None,  # static: forwarded to the FIFO fast path
+    hosts: jnp.ndarray = None,  # [N] i32 host ids in sorted order (optional)
+    n_hosts: int = 1,  # static; only used when hosts is given
+):
+    """QoS-arbitrated S-stage congestion cascade (static disciplines).
+
+    Extends :func:`serial_queue_cascade` with per-switch queue disciplines:
+
+    * ``fifo`` — the plain serial queue.
+    * ``priority`` — strict priority with FIFO within class (class 0
+      highest): an event of class ``c`` takes its start time from the FIFO
+      scan over the subsequence of classes ``<= c``, i.e. it waits behind
+      every earlier higher-or-equal-priority arrival but is invisible to
+      them.
+    * ``wfq`` — weighted-fair queueing in virtual-time form: class ``c``
+      is served as its own FIFO queue with inflated service time
+      ``stt * W / w_c`` (``W`` the stage's total weight), the fluid-limit
+      GPS approximation where each class owns a ``w_c / W`` bandwidth
+      share.
+
+    When every stage is ``fifo`` this function takes *exactly* the
+    :func:`serial_queue_cascade` path — same merge schedule, same scan
+    arithmetic — so final times and ``idx`` are bitwise identical; the QoS
+    class only affects delay attribution.  Mixed disciplines replace the
+    caller's ``merge_plan`` with the always-valid per-class fold of
+    :func:`_qos_fold` after every stage but the last.
+
+    Returns ``(t_final, slot_idx, per_stage_delay)`` with ``per_stage_delay``
+    shaped ``[S, C]`` (no hosts) or ``[S, n_hosts, C]`` (host-segmented):
+    stage delay charged to the (host, class) whose event waited.
+    """
+    f32 = t_sorted.dtype
+    n = t_sorted.shape[0]
+    s_stages = stts.shape[0]
+    n_classes = class_weights.shape[1]
+    disciplines = tuple(disciplines)
+    if len(disciplines) != s_stages:
+        raise ValueError(
+            f"{len(disciplines)} disciplines for {s_stages} stages"
+        )
+    all_fifo = all(d == "fifo" for d in disciplines)
+    if merge_plan is None:
+        merge_plan = tuple(
+            ((s - 1, None),) if s else () for s in range(s_stages)
+        )
+    big = jnp.asarray(jnp.finfo(f32).max / 4, f32)
+    ts = t_sorted
+    bits = route_bits.astype(jnp.int32)
+    qos = jnp.clip(qos.astype(jnp.int32), 0, n_classes - 1)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    dirty = jnp.zeros((), f32)
+    per_stage = []
+    for s in range(s_stages):
+        if all_fifo:
+            # bitwise serial_queue_cascade merge schedule
+            for changed_bit, within_bit in merge_plan[s]:
+                changed = (jnp.right_shift(bits, changed_bit) & 1) == 1
+                if within_bit is None:
+                    args = (ts, bits, idx, changed)
+                    merge = lambda a: merge_sorted_runs(a[0], a[3], a[1], a[2])
+                else:
+                    within = (jnp.right_shift(bits, within_bit) & 1) == 1
+                    args = (ts, bits, idx, changed, within)
+                    merge = lambda a: merge_sorted_runs(
+                        a[0], a[3], a[1], a[2], within=a[4]
+                    )
+                ts, bits, idx = jax.lax.cond(
+                    dirty > 0, merge, lambda a: (a[0], a[1], a[2]), args
+                )
+        m = (jnp.right_shift(bits, s) & 1) == 1
+        stt = stts[s]
+        disc = disciplines[s]
+        q_cur = jnp.take(qos, idx)
+        if disc == "fifo":
+            start = jnp.where(m, _class_scan(ts, m, stt, big), ts)
+        elif disc == "priority":
+            start = ts
+            for lvl in range(n_classes):
+                sc = _class_scan(ts, m & (q_cur <= lvl), stt, big)
+                start = jnp.where(m & (q_cur == lvl), sc, start)
+        elif disc == "wfq":
+            w_row = class_weights[s]
+            w_total = w_row.sum()
+            start = ts
+            for c in range(n_classes):
+                M = m & (q_cur == c)
+                sc = _class_scan(ts, M, stt * w_total / w_row[c], big)
+                start = jnp.where(M, sc, start)
+        else:
+            raise ValueError(f"unknown discipline {disc!r}")
+        d = jnp.where(m, start - ts, 0.0)
+        dsum = d.sum()
+        if hosts is None:
+            if n_classes == 1:
+                per_stage.append(dsum[None])  # bitwise squeeze to FIFO
+            else:
+                per_stage.append(
+                    jax.ops.segment_sum(d, q_cur, num_segments=n_classes)
+                )
+        else:
+            hs = jnp.take(hosts, idx)
+            if n_classes == 1:
+                per_stage.append(
+                    jax.ops.segment_sum(d, hs, num_segments=n_hosts)[:, None]
+                )
+            else:
+                per_stage.append(
+                    jax.ops.segment_sum(
+                        d, hs * n_classes + q_cur,
+                        num_segments=n_hosts * n_classes,
+                    ).reshape(n_hosts, n_classes)
+                )
+        dirty = dirty + dsum
+        ts = jnp.where(m, start, ts)
+        if not all_fifo and s < s_stages - 1:
+            ts, bits, idx = _qos_fold(
+                ts, bits, idx, qos, s, n_classes, dirty,
+                fifo_like=(disc == "fifo"),
+            )
+    return ts, idx, jnp.stack(per_stage)
+
+
+def _f32_sort_key(ts: jnp.ndarray) -> jnp.ndarray:
+    """Order-preserving int32 image of an f32 array (IEEE-754 trick: for
+    non-negative floats the bit pattern is already monotone; negatives have
+    their magnitude bits flipped so more-negative sorts lower)."""
+    x = jax.lax.bitcast_convert_type(ts, jnp.int32)
+    return jnp.where(x >= 0, x, x ^ jnp.int32(0x7FFFFFFF))
+
+
+def _qos_rank_fold(ts, bits, idx, run_id, n_runs):
+    """Restore global time order after a stage by ONE stable multi-run merge.
+
+    The array interleaves ``n_runs`` individually-sorted runs (per-class
+    start-time runs plus the untouched events).  Each element's merged
+    position is its rank within its own run plus, per other run ``j``, the
+    count of run-``j`` elements that precede it — read off ``searchsorted``
+    against run ``j``'s cummax *key envelope* (no scatter compaction:
+    within a run, keys are non-decreasing along array positions, so the
+    envelope at position ``p`` IS the last run-``j`` key at ``<= p``).
+
+    The merge is **stable**: equal-key elements keep their current array
+    order.  This is load-bearing for DES parity — the oracle's heap breaks
+    time ties by push sequence, which is exactly the previous stage's
+    processing order, i.e. the pre-fold array order.  Stability per run
+    ``j`` is three monotone counts clamped together: with ``a`` = #run-j
+    strictly below the key, ``a2`` = #run-j at-or-below, and ``pc`` =
+    #run-j at earlier array positions, the stable contribution is
+    ``clip(pc, a, a2)`` — the run-j elements below count fully, those
+    above not at all, and the tied ones exactly when they sit earlier in
+    the array (run-j keys are non-decreasing along positions, so its
+    first ``pc`` elements are precisely those at earlier positions).
+
+    The per-position counts are one batched scan + cumsum; the result is a
+    strict total order, so the final inverse-permutation scatter never
+    collides.  Cost: ``2·n_runs`` searchsorteds, two [N, R] scans and ONE
+    scatter, versus the ``C`` sequential :func:`merge_sorted_runs` (each
+    with its own scatter compactions and payload scatters) this replaces.
+    """
+    n = ts.shape[0]
+    key = _f32_sort_key(ts)
+    neg = jnp.iinfo(jnp.int32).min
+    iota = jnp.arange(n, dtype=jnp.int32)
+    mj = run_id[:, None] == jnp.arange(n_runs, dtype=run_id.dtype)[None, :]
+    env = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(mj, key[:, None], neg), axis=0
+    )  # [N, R]
+    pc = jnp.cumsum(mj.astype(jnp.int32), axis=0)  # [N, R] inclusive
+    pos = jnp.zeros((n,), jnp.int32)
+    for j in range(n_runs):
+        p_lo = jnp.searchsorted(env[:, j], key, side="left")
+        p_hi = jnp.searchsorted(env[:, j], key, side="right")
+        pcj = pc[:, j]
+        a = jnp.where(p_lo > 0, jnp.take(pcj, jnp.maximum(p_lo - 1, 0)), 0)
+        a2 = jnp.where(p_hi > 0, jnp.take(pcj, jnp.maximum(p_hi - 1, 0)), 0)
+        stable = jnp.clip(pcj, a, a2)
+        pos = pos + jnp.where(mj[:, j], pcj - 1, stable)
+    inv = jnp.zeros((n,), jnp.int32).at[pos].set(iota, unique_indices=True)
+    return jnp.take(ts, inv), jnp.take(bits, inv), jnp.take(idx, inv)
+
+
+def _tropical_stage(ts, m, q_cur, disc, stt, w_row):
+    """Start times for one arbitration stage — ONE max-plus associative scan.
+
+    The DES horizon recurrence for every discipline is a tropical affine
+    map per class coordinate ``l``: an event of class ``c`` applies
+    ``fin[l] -> max(fin[l], t) + s_l = max(fin[l] + s_l, t + s_l)`` to the
+    coordinates it updates (priority: ``l >= c``; WFQ: ``l == c`` with the
+    weight-inflated service; FIFO: every ``l`` with ``c_eff = 0``).  Maps of
+    the form ``f -> max(f + a, b)`` compose coordinate-wise as
+    ``(a1, b1) . (a2, b2) = (a1 + a2, max(b1 + a2, b2))`` — associative, so
+    the whole stage is one ``associative_scan`` over an ``[N, C]`` pair
+    instead of ``C`` per-class cummax scans.  The event's start is
+    ``max(t, fin_prefix[c_read])`` with the *exclusive* prefix (shift by
+    one), exactly the event-by-event oracle, vectorized.
+    """
+    f32 = ts.dtype
+    n_classes = w_row.shape[0]
+    lv = jnp.arange(n_classes, dtype=q_cur.dtype)
+    neg = jnp.asarray(-jnp.inf, f32)
+    s_l = jnp.where(disc == DISC_WFQ, stt * w_row.sum() / w_row, stt)  # [C]
+    q_eff = jnp.where(disc == DISC_FIFO, 0, q_cur)  # [N] read coordinate
+    upd = jnp.where(
+        disc == DISC_WFQ,
+        lv[None, :] == q_eff[:, None],
+        lv[None, :] >= q_eff[:, None],
+    ) & m[:, None]  # [N, C] coordinates this event pushes forward
+    a = jnp.where(upd, s_l[None, :], jnp.asarray(0.0, f32))
+    b = jnp.where(upd, ts[:, None] + s_l[None, :], neg)
+
+    def compose(x, y):
+        return (x[0] + y[0], jnp.maximum(x[1] + y[0], y[1]))
+
+    acc_a, acc_b = jax.lax.associative_scan(compose, (a, b), axis=0)
+    fin = jnp.maximum(acc_a, acc_b)  # applied to the all-zero initial state
+    # exclusive prefix: event i sees the horizons BEFORE itself (row 0 sees
+    # the all-zero initial state; t >= 0 makes max(t, 0) = t)
+    fin = jnp.concatenate([jnp.zeros((1, n_classes), f32), fin[:-1]], axis=0)
+    fin_c = jnp.take_along_axis(fin, q_eff[:, None], axis=1)[:, 0]
+    return jnp.maximum(ts, fin_c)
+
+
+def qos_cascade_dyn(
+    t_sorted: jnp.ndarray,  # [N] f32, globally time-sorted arrivals
+    route_bits: jnp.ndarray,  # [N] i32, bit s set iff event traverses stage s
+    stts: jnp.ndarray,  # [S] f32, service times in stage order
+    qos: jnp.ndarray,  # [N] i32 QoS class per event, in sorted order
+    disc_code: jnp.ndarray,  # [S] i32 DISC_* code per stage (traced)
+    class_weights: jnp.ndarray,  # [S, C] f32 per-stage class weights (traced)
+    hosts: jnp.ndarray = None,  # [N] i32 host ids in sorted order (optional)
+    n_hosts: int = 1,  # static; attribution rows (1 when hosts is None)
+):
+    """Data-driven QoS cascade: disciplines and weights are *runtime* arrays.
+
+    Same semantics as :func:`qos_serial_queue_cascade`, reformulated so one
+    lowering serves every discipline/weight mix — the property that lets a
+    ``K``-scenario QoS sweep ride a single vmapped dispatch with zero
+    steady-state recompiles.  Two structural optimizations over the static
+    spec (identical results on tie-free traces; f32-coincident cross-class
+    ties may re-attribute tie-order-ambiguous waiting without changing
+    totals):
+
+    * each stage is ONE max-plus associative scan (:func:`_tropical_stage`)
+      — the DES horizon recurrence in closed composition form — instead of
+      ``C`` per-class cummax scans;
+    * the inter-stage fold is ONE *stable* multi-run rank merge
+      (:func:`_qos_rank_fold`) instead of ``C`` sequential two-run merges —
+      stability reproduces the DES heap's push-sequence tie rule — and is
+      *elided* (runtime branch, one lowering) when the NEXT stage is WFQ
+      over the same event mask: WFQ events read/update only their own class
+      coordinate, and every stage leaves each class subsequence
+      non-decreasing in array order, so class-local DES order survives
+      without a global re-sort.  The predicate is local and inductive —
+      skipped states keep runs = {mask∩class} ∪ {untouched}, exactly what
+      the eventual fold's ``run_id`` labels.
+
+    Returns ``(t_final, slot_idx, per_stage_delay[S, H, C])`` where ``H`` is
+    ``n_hosts`` (1 when ``hosts`` is None).
+    """
+    f32 = t_sorted.dtype
+    n = t_sorted.shape[0]
+    s_stages = stts.shape[0]
+    n_classes = class_weights.shape[1]
+    ts = t_sorted
+    bits = route_bits.astype(jnp.int32)
+    qos = jnp.clip(qos.astype(jnp.int32), 0, n_classes - 1)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    if hosts is None:
+        hosts = jnp.zeros((n,), jnp.int32)
+        n_hosts = 1
+    disc_code = disc_code.astype(jnp.int32)
+    dirty = jnp.zeros((), f32)
+    per_stage = []
+    for s in range(s_stages):
+        m = (jnp.right_shift(bits, s) & 1) == 1
+        q_cur = jnp.take(qos, idx)
+        # a zero-service stage is a DES identity (processed in time order,
+        # the horizon never exceeds the current arrival, so start == t and
+        # delay == 0 for every discipline) — skip its scan entirely
+        start = jax.lax.cond(
+            stts[s] > 0,
+            lambda a: _tropical_stage(
+                a[0], a[1], a[2], disc_code[s], stts[s], class_weights[s]
+            ),
+            lambda a: a[0],
+            (ts, m, q_cur),
+        )
+        d = jnp.where(m, start - ts, 0.0)
+        dsum = d.sum()
+        seg = jnp.take(hosts, idx) * n_classes + q_cur
+        n_seg = n_hosts * n_classes
+        if n_seg <= 32:
+            # one-hot matmul: far cheaper than a scatter-based segment_sum
+            # at small segment counts (a single fused reduction per column)
+            oh = (seg[:, None] == jnp.arange(n_seg, dtype=jnp.int32)[None, :])
+            per_stage.append((d @ oh.astype(f32)).reshape(n_hosts, n_classes))
+        else:
+            per_stage.append(
+                jax.ops.segment_sum(d, seg, num_segments=n_seg)
+                .reshape(n_hosts, n_classes)
+            )
+        dirty = dirty + dsum
+        ts = jnp.where(m, start, ts)
+        if s < s_stages - 1:
+            # Elide the fold when the NEXT stage is WFQ over the SAME event
+            # mask (traced check — one lowering serves every mix).  WFQ
+            # reads/updates only its own class coordinate and every stage
+            # leaves each class subsequence non-decreasing in array order,
+            # so the class-local DES order (time, then previous-stage
+            # processing order) is already the array order.  Inductively the
+            # skipped state keeps runs = {mask∩class} ∪ {untouched}, which
+            # is exactly what ``run_id`` labels at the eventual fold.
+            next_bit = (jnp.right_shift(bits, s + 1) & 1) == 1
+            skip = (disc_code[s + 1] == DISC_WFQ) & jnp.all(next_bit == m)
+            if s + 1 == s_stages - 1:
+                # a trailing zero-service stage is an identity (see above),
+                # so it never needs its input re-sorted either
+                skip = skip | (stts[s + 1] == 0.0)
+            do_fold = (dirty > 0) & jnp.logical_not(skip)
+            run_id = jnp.where(
+                m, jnp.where(disc_code[s] == DISC_FIFO, 0, q_cur), n_classes
+            )
+            ts, bits, idx = jax.lax.cond(
+                do_fold,
+                lambda a: _qos_rank_fold(a[0], a[1], a[2], a[3], n_classes + 1),
+                lambda a: (a[0], a[1], a[2]),
+                (ts, bits, idx, run_id),
+            )
     return ts, idx, jnp.stack(per_stage)
 
 

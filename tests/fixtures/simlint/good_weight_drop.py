@@ -12,6 +12,7 @@ def slice_by_quantum(ev, lo, hi):
     return MemEvents(
         ev.t_ns[pick], ev.pool[pick], ev.bytes_[pick], ev.is_write[pick],
         ev.region[pick], weight=ev.weight[pick], host=ev.host[pick],
+        qos=ev.qos[pick],
     )
 
 

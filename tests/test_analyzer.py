@@ -121,7 +121,7 @@ def test_property_delays_nonnegative_and_monotone(n, seed, burst):
     assert a.latency_ns >= 0 and a.congestion_ns >= 0 and a.bandwidth_ns >= 0
     # doubling every event's bytes can only increase bandwidth delay
     ev2 = MemEvents(ev.t_ns, ev.pool, ev.bytes_ * 2, ev.is_write, ev.region,
-                    weight=ev.weight, host=ev.host)
+                    weight=ev.weight, host=ev.host, qos=ev.qos)
     b = analyze_ref(FLAT, ev2)
     assert b.bandwidth_ns >= a.bandwidth_ns - 1e-9
     # latency delay is independent of bytes

@@ -163,7 +163,7 @@ def test_fabric_traffic_weight_aware_bytes():
     model = CoherencyModel(cfg)
     tr = _trace(10, 0)
     tr = MemEvents(tr.t_ns, tr.pool, tr.bytes_, tr.is_write, tr.region,
-                   weight=np.full((tr.n,), 4.0), host=tr.host)
+                   weight=np.full((tr.n,), 4.0), host=tr.host, qos=tr.qos)
     bi, _ = model.fabric_traffic([tr, _trace(0, 5)], maps)
     assert bi[1].total_bytes == pytest.approx(10 * 4.0 * cfg.bi_message_bytes)
     # statistical multiplicity rides in weight too, so weight-proportional

@@ -449,6 +449,7 @@ def test_sim_report_summary_keys_locked():
         "devices_used", "shard_rows", "padded_waste", "coalesced_group_size",
         "stage_s", "transfer_s", "compile_s", "compute_s",
         "donated_dispatches", "aot_cache_hits",
+        "qos_classes", "qos_delay_shares",
     }
 
 
@@ -462,6 +463,7 @@ def test_fabric_report_summary_keys_locked():
         "devices_used", "shard_rows", "padded_waste", "coalesced_group_size",
         "stage_s", "transfer_s", "compile_s", "compute_s",
         "donated_dispatches", "aot_cache_hits",
+        "qos_classes", "qos_delay_shares",
     }
     per_host = {
         f"host{h}_{k}" for h in (0, 1)
