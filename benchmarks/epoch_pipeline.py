@@ -47,6 +47,7 @@ import numpy as np
 from repro.core.analyzer import EpochAnalyzer, plan_chain
 from repro.core.events import EventStager, MemEvents, concat_events
 from repro.core.topology import chained_topology
+from repro.core.units import s_to_ms
 from repro.kernels import ref
 
 
@@ -121,8 +122,8 @@ def assert_ingest_o_copy() -> None:
     copy_s = time.perf_counter() - t0
     if build_s > max(30 * copy_s, 0.1):
         raise SystemExit(
-            f"FATAL: MemEvents.build is not O(copy): {build_s * 1e3:.1f} ms "
-            f"vs {copy_s * 1e3:.1f} ms raw copy — the list() ingest shim is back"
+            f"FATAL: MemEvents.build is not O(copy): {s_to_ms(build_s):.1f} ms "
+            f"vs {s_to_ms(copy_s):.1f} ms raw copy — the list() ingest shim is back"
         )
 
 

@@ -40,6 +40,7 @@ from repro.core import (
     RegionMap,
     figure1_topology,
 )
+from repro.core.units import bytes_to_mib
 
 FLAT = figure1_topology().flatten()
 PAGE = 4096
@@ -246,7 +247,7 @@ def main(argv=None):
     cache = [r for r in rows if r["sweep"] == "cache_capacity"]
     for r in cache:
         print(
-            f"# cache {r['capacity_bytes'] / 2**20:6.1f} MiB ({r['ways']} ways): "
+            f"# cache {bytes_to_mib(r['capacity_bytes']):6.1f} MiB ({r['ways']} ways): "
             f"hit {r['hit_fraction']:.3f}, latency {r['latency_ns']:.3e} ns "
             f"(no-cache {r['no_cache_latency_ns']:.3e})"
         )

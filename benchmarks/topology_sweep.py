@@ -25,6 +25,7 @@ from repro.core import (
     local_only_topology,
     two_tier_topology,
 )
+from repro.core.units import ns_to_ms
 from repro.models.phases import build_regions_and_phases
 
 import repro.configs as cfgs
@@ -60,10 +61,10 @@ def run(arch: str = "qwen3-0.6b") -> List[Dict]:
                 {
                     "topology": topo_name,
                     "policy": s.name.split("/")[1],
-                    "native_ms": res.native_ns / 1e6,
-                    "latency_ms": bd.latency_ns / 1e6,
-                    "congestion_ms": bd.congestion_ns / 1e6,
-                    "bandwidth_ms": bd.bandwidth_ns / 1e6,
+                    "native_ms": ns_to_ms(res.native_ns),
+                    "latency_ms": ns_to_ms(bd.latency_ns),
+                    "congestion_ms": ns_to_ms(bd.congestion_ns),
+                    "bandwidth_ms": ns_to_ms(bd.bandwidth_ns),
                     "slowdown": float(slow),
                 }
             )

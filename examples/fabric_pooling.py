@@ -22,6 +22,7 @@ from repro.core import (
     Tenant,
     pooled_topology,
 )
+from repro.core.units import s_to_ms
 
 
 def make_tenant(name: str, kv_bytes: int, batch: int) -> Tenant:
@@ -69,18 +70,18 @@ def main():
     print()
     print(f"fabric: {report.rounds} rounds, {report.epochs} epochs, "
           f"BI messages {report.bi_messages:.0f}")
-    print(f"  latency    {report.latency_s * 1e3:9.3f} ms")
-    print(f"  congestion {report.congestion_s * 1e3:9.3f} ms")
-    print(f"  bandwidth  {report.bandwidth_s * 1e3:9.3f} ms")
-    print(f"  coherency  {report.coherency_s * 1e3:9.3f} ms")
+    print(f"  latency    {s_to_ms(report.latency_s):9.3f} ms")
+    print(f"  congestion {s_to_ms(report.congestion_s):9.3f} ms")
+    print(f"  bandwidth  {s_to_ms(report.bandwidth_s):9.3f} ms")
+    print(f"  coherency  {s_to_ms(report.coherency_s):9.3f} ms")
     for hc in report.hosts:
         print(
-            f"host {hc.host} ({hc.name}): native {hc.native_s * 1e3:.2f} ms, "
-            f"simulated {hc.simulated_s * 1e3:.2f} ms, "
+            f"host {hc.host} ({hc.name}): native {s_to_ms(hc.native_s):.2f} ms, "
+            f"simulated {s_to_ms(hc.simulated_s):.2f} ms, "
             f"slowdown {hc.slowdown:.2f}x "
-            f"(delay share: lat {hc.latency_s * 1e3:.3f} / "
-            f"cong {hc.congestion_s * 1e3:.3f} / "
-            f"bw {hc.bandwidth_s * 1e3:.3f} / coh {hc.coherency_s * 1e3:.3f} ms)"
+            f"(delay share: lat {s_to_ms(hc.latency_s):.3f} / "
+            f"cong {s_to_ms(hc.congestion_s):.3f} / "
+            f"bw {s_to_ms(hc.bandwidth_s):.3f} / coh {s_to_ms(hc.coherency_s):.3f} ms)"
         )
 
 

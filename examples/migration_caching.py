@@ -23,6 +23,7 @@ from repro.core import (
     RegionMap,
     figure1_topology,
 )
+from repro.core.units import s_to_ms
 
 PAGE = 4096
 TOPO = figure1_topology()
@@ -97,7 +98,7 @@ for mig_name, mig_cfg in MIGRATIONS.items():
         hit = rep.cache_hit_fraction
         # the simulated delay is the quantity migration/caching reshape;
         # wall-clock slowdown also rides on the (noisy, µs-scale) toy step
-        delay_ms = (rep.latency_s + rep.congestion_s + rep.bandwidth_s) * 1e3
+        delay_ms = s_to_ms(rep.latency_s + rep.congestion_s + rep.bandwidth_s)
         cells.append(
             f"{delay_ms:7.2f} ms"
             + (f" hit {hit:4.0%}" if hit == hit else "         ")

@@ -29,6 +29,7 @@ from repro.core import (
     Topology,
     TopologyOverride,
 )
+from repro.core.units import ns_to_ms
 from repro.models.phases import build_regions_and_phases
 
 
@@ -75,7 +76,7 @@ def main():
                 for bw in (16.0, 32.0, 64.0)
             ]
             res = suite.run(scens)  # ONE dispatch for the whole bandwidth axis
-            native_ms = res.native_ns / 1e6
+            native_ms = ns_to_ms(res.native_ns)
             for s, bd, slow in zip(res.scenarios, res.breakdowns, res.slowdowns()):
                 bw = float(s.topology.switches["sw0"]["bandwidth_gbps"])
                 print(

@@ -47,4 +47,4 @@ __all__ = [
 ]
 
 # importing the checker modules registers them
-from . import contracts, jit, locks  # noqa: E402,F401  (registration imports)
+from . import axes, contracts, jit, locks, units  # noqa: E402,F401  (registration imports)

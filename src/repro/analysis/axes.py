@@ -1,0 +1,574 @@
+"""simdim axes checker — named-axis shape contracts over the dispatch surfaces.
+
+The ``[K,B,N]`` / ``[S,H,C]`` axis conventions of the analyzer entry points
+used to live only in comments.  :func:`repro.analysis.annotations.axes`
+makes them declarations; this checker makes them *checked*:
+
+* ``axes-missing`` — a dispatch-surface function named in
+  ``CheckConfig.axes_required`` carries no ``@axes(...)`` decorator.
+* ``axes-mismatch`` — a call site passes an argument whose tracked axis
+  spec is a *permutation* of the contract's (``[B,K,N]`` into a ``[K,B,N]``
+  parameter — the transposed-dispatch bug), or binds one contract axis to
+  two different caller axes across the call's arguments.
+* ``axes-rank`` — a call site passes an argument whose tracked rank
+  contradicts the contract, or a reduction names a constant axis outside
+  the operand's tracked rank.
+
+Axis specs are tracked flow-sensitively inside each function: parameters
+of ``@axes``-decorated functions seed the environment, and specs propagate
+through assignment, ``transpose`` (permutation applied), reductions with a
+constant ``axis=`` (dimension dropped, or kept as ``_`` under
+``keepdims``), elementwise arithmetic, indexing, and ``jax.vmap`` — a
+``vmap(one)(*xs)`` call peels the leading axis off every argument spec and
+analyzes the *closure* ``one`` under the peeled bindings, so a contract
+violation buried two vmap levels down in the batched analyzer still
+surfaces at the innermost call site.  Renaming is legal (a sweep may pass
+``G`` where a callee says ``K``); only bindings *inconsistent within one
+call* or using the callee's own vocabulary at the wrong position are
+errors — that is exactly the transposition class, and it keeps the checker
+quiet on legitimately generic callers.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .findings import Finding
+from .framework import CheckConfig, Checker, SourceFile, register
+
+__all__ = ["AxesChecker"]
+
+Spec = Tuple[str, ...]  # axis tokens, e.g. ("K", "B", "N"); "_" = wildcard
+
+_REDUCERS = {
+    "sum", "max", "min", "mean", "prod", "argmax", "argmin", "any", "all",
+    "median", "std", "var", "cummax", "cumsum",
+}
+_CUMULATIVE = {"cummax", "cumsum"}  # reduce nothing: shape-preserving
+_SEGMENT_OPS = {"segment_sum", "segment_max", "segment_min", "segment_prod"}
+_ELEMENTWISE = {
+    "where", "maximum", "minimum", "abs", "exp", "log", "sqrt", "clip",
+    "astype", "asarray", "array", "copy", "nan_to_num",
+}
+
+
+def _parse_decorator(dec: ast.expr) -> Optional[Tuple[List[Spec], Dict[str, Spec]]]:
+    """``@axes("K,B,N", stts="K,S")`` -> positional + keyword token specs."""
+    if not isinstance(dec, ast.Call):
+        return None
+    name = dec.func.attr if isinstance(dec.func, ast.Attribute) else (
+        dec.func.id if isinstance(dec.func, ast.Name) else None
+    )
+    if name != "axes":
+        return None
+    pos: List[Spec] = []
+    kw: Dict[str, Spec] = {}
+    for a in dec.args:
+        if not (isinstance(a, ast.Constant) and isinstance(a.value, str)):
+            return None
+        pos.append(_parse_spec(a.value))
+    for k in dec.keywords:
+        if k.arg is None or not (
+            isinstance(k.value, ast.Constant) and isinstance(k.value.value, str)
+        ):
+            return None
+        kw[k.arg] = _parse_spec(k.value.value)
+    return pos, kw
+
+
+def _parse_spec(s: str) -> Spec:
+    return tuple(t.strip() for t in s.split(",")) if s.strip() else ()
+
+
+def _positional_params(fn: ast.FunctionDef) -> List[str]:
+    return [a.arg for a in list(fn.args.posonlyargs) + list(fn.args.args)]
+
+
+class Contract:
+    """One function's declared axis contract, keyed by parameter name."""
+
+    def __init__(self, fn: ast.FunctionDef, pos: List[Spec], kw: Dict[str, Spec]):
+        self.params = _positional_params(fn)
+        self.specs: Dict[str, Spec] = dict(zip(self.params, pos))
+        self.specs.update(kw)
+        self.vocab = {t for spec in self.specs.values() for t in spec}
+
+    def spec_for_arg(self, i: int) -> Optional[Spec]:
+        if i < len(self.params):
+            return self.specs.get(self.params[i])
+        return None
+
+
+def _collect_contracts(files: Sequence[SourceFile]) -> Dict[str, Contract]:
+    out: Dict[str, Optional[Contract]] = {}
+    for sf in files:
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.FunctionDef):
+                continue
+            for dec in node.decorator_list:
+                parsed = _parse_decorator(dec)
+                if parsed is None:
+                    continue
+                c = Contract(node, *parsed)
+                # same name declared twice with different specs: ambiguous
+                if node.name in out and (
+                    out[node.name] is None or out[node.name].specs != c.specs
+                ):
+                    out[node.name] = None
+                else:
+                    out[node.name] = c
+    return {k: v for k, v in out.items() if v is not None}
+
+
+# --------------------------------------------------------------------------- #
+# per-function spec tracking
+
+
+class _FuncWalk:
+    def __init__(
+        self,
+        sf: SourceFile,
+        fn: ast.FunctionDef,
+        contracts: Dict[str, Contract],
+        findings: List[Finding],
+        checker: str,
+        seed: Optional[Dict[str, Spec]] = None,
+        depth: int = 0,
+    ):
+        self.sf = sf
+        self.fn = fn
+        self.contracts = contracts
+        self.findings = findings
+        self.checker = checker
+        self.depth = depth
+        self._checked: set = set()
+        self.env: Dict[str, Optional[Spec]] = {}
+        self.tuples: Dict[str, List[ast.expr]] = {}  # name -> tuple literal elts
+        self.local_fns: Dict[str, ast.FunctionDef] = {}
+        own = _own_contract(fn)
+        for p in _positional_params(fn):
+            self.env[p] = None
+        if own is not None:
+            for p, spec in own.specs.items():
+                self.env[p] = spec
+        if seed:
+            self.env.update(seed)
+
+    def _find(self, node: ast.AST, rule: str, msg: str) -> None:
+        self.findings.append(self.sf.finding(node, rule, msg, self.checker))
+
+    # -- spec inference --------------------------------------------------- #
+
+    def spec_of(self, node: ast.AST) -> Optional[Spec]:  # noqa: C901
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id)
+        if isinstance(node, ast.Starred):
+            return self.spec_of(node.value)
+        if isinstance(node, ast.UnaryOp):
+            return self.spec_of(node.operand)
+        if isinstance(node, ast.BinOp):
+            if isinstance(node.op, (ast.MatMult, ast.Pow)):
+                return None
+            a, b = self.spec_of(node.left), self.spec_of(node.right)
+            if a is None or b is None:
+                return None  # unknown side may broadcast to any rank
+            if len(a) == len(b):
+                return a  # elementwise; renamings are legal, keep left
+            return a if len(a) > len(b) else b  # numpy right-aligned broadcast
+        if isinstance(node, ast.IfExp):
+            a, b = self.spec_of(node.body), self.spec_of(node.orelse)
+            if a is not None and b is not None and len(a) == len(b):
+                return a
+            return None
+        if isinstance(node, (ast.Tuple, ast.List)):
+            for e in node.elts:
+                self.spec_of(e)
+            return None
+        if isinstance(node, ast.Subscript):
+            return self._subscript(node)
+        if isinstance(node, ast.Call):
+            return self._call_spec(node)
+        if isinstance(node, ast.Attribute):
+            if node.attr == "T":
+                base = self.spec_of(node.value)
+                return tuple(reversed(base)) if base is not None else None
+            if node.attr in ("shape", "dtype", "size", "ndim"):
+                return None
+            return None
+        return None
+
+    def _subscript(self, node: ast.Subscript) -> Optional[Spec]:
+        base = self.spec_of(node.value)
+        if base is None:
+            return None
+        idx = node.slice
+        items = list(idx.elts) if isinstance(idx, ast.Tuple) else [idx]
+        out: List[str] = []
+        pos = 0
+        for it in items:
+            if isinstance(it, ast.Slice):
+                if pos < len(base):
+                    out.append(base[pos])
+                pos += 1
+            elif isinstance(it, ast.Constant) and it.value is None:
+                out.append("_")  # newaxis
+            elif isinstance(it, ast.Constant) and isinstance(it.value, int):
+                pos += 1  # static integer index: drops the dim
+            else:
+                # array/variable index is a *gather* (rank-preserving), an
+                # ellipsis is ambiguous — tracking ends either way
+                return None
+        out.extend(base[pos:])
+        return tuple(out)
+
+    def _const_axis(self, call: ast.Call) -> Optional[int]:
+        for kw in call.keywords:
+            if kw.arg == "axis" and isinstance(kw.value, ast.Constant):
+                v = kw.value.value
+                return v if isinstance(v, int) else None
+        return None
+
+    def _keepdims(self, call: ast.Call) -> bool:
+        return any(
+            kw.arg == "keepdims"
+            and isinstance(kw.value, ast.Constant)
+            and kw.value.value is True
+            for kw in call.keywords
+        )
+
+    def _call_spec(self, node: ast.Call) -> Optional[Spec]:  # noqa: C901
+        self.check_call(node)
+        func = node.func
+        fname = func.attr if isinstance(func, ast.Attribute) else (
+            func.id if isinstance(func, ast.Name) else None
+        )
+        recv = func.value if isinstance(func, ast.Attribute) else None
+
+        recv_spec = self.spec_of(recv) if recv is not None else None
+
+        if fname == "transpose":
+            if recv_spec is not None:  # x.transpose(...) method form
+                base, perm = recv_spec, self._perm(node, True)
+            elif node.args:  # jnp.transpose(x, ...) module-function form
+                base, perm = self.spec_of(node.args[0]), self._perm(node, False)
+            else:
+                return None
+            if base is None:
+                return None
+            if perm is None:
+                return tuple(reversed(base))
+            if len(perm) != len(base) or sorted(perm) != list(range(len(base))):
+                self._find(
+                    node, "axes-rank",
+                    f"transpose permutation {perm} does not fit tracked "
+                    f"axes [{','.join(base)}]",
+                )
+                return None
+            return tuple(base[i] for i in perm)
+
+        if fname in _REDUCERS:
+            base = recv_spec if recv_spec is not None else (
+                self.spec_of(node.args[0]) if node.args else None
+            )
+            ax = self._const_axis(node)
+            if base is None:
+                return None
+            if fname in _CUMULATIVE:
+                return base
+            if ax is None:
+                # full reduction only when no axis kwarg at all
+                if any(kw.arg == "axis" for kw in node.keywords):
+                    return None
+                return ()
+            if not -len(base) <= ax < len(base):
+                self._find(
+                    node, "axes-rank",
+                    f"{fname}(axis={ax}) out of range for tracked axes "
+                    f"[{','.join(base)}] (rank {len(base)})",
+                )
+                return None
+            ax %= len(base)
+            if self._keepdims(node):
+                return base[:ax] + ("_",) + base[ax + 1:]
+            return base[:ax] + base[ax + 1:]
+
+        if fname in _SEGMENT_OPS and node.args:
+            base = self.spec_of(node.args[0])
+            return ("_",) + base[1:] if base else None
+
+        if fname in _ELEMENTWISE:
+            if fname == "where" and len(node.args) == 3:
+                a = self.spec_of(node.args[1])
+                b = self.spec_of(node.args[2])
+                if a is None or b is None:
+                    return None
+                return a if len(a) >= len(b) else b
+            if recv_spec is not None and not node.args:
+                return recv_spec
+            if node.args:
+                return self.spec_of(node.args[0])
+            return None
+
+        if fname == "reshape":
+            return None  # arbitrary re-layout: tracking ends here
+
+        return None
+
+    def _perm(self, node: ast.Call, method_form: bool) -> Optional[Tuple[int, ...]]:
+        args = node.args
+        if not args:
+            return None
+        cand = args if method_form else args[1:]
+        if len(cand) == 1 and isinstance(cand[0], (ast.Tuple, ast.List)):
+            elts = cand[0].elts
+        else:
+            elts = list(cand)
+        perm = []
+        for e in elts:
+            if not (isinstance(e, ast.Constant) and isinstance(e.value, int)):
+                return None
+            perm.append(e.value)
+        return tuple(perm) if perm else None
+
+    # -- contract checking at call sites ----------------------------------- #
+
+    def check_call(self, node: ast.Call) -> None:
+        if id(node) in self._checked:
+            return
+        self._checked.add(id(node))
+        func = node.func
+        fname = func.attr if isinstance(func, ast.Attribute) else (
+            func.id if isinstance(func, ast.Name) else None
+        )
+        if fname in ("vmap",):
+            return  # handled by the caller of vmap's result
+        contract = self.contracts.get(fname or "")
+        if contract is not None:
+            self._check_against(node, fname, contract)
+
+    def _check_against(self, node: ast.Call, fname: str, c: Contract) -> None:
+        binding: Dict[str, str] = {}
+        reverse: Dict[str, str] = {}
+        args: List[Tuple[Optional[Spec], Optional[Spec], str]] = []
+        flat: List[ast.expr] = []
+        for a in node.args:
+            if isinstance(a, ast.Starred):
+                inner = self._tuple_elts(a.value)
+                if inner is None:
+                    return  # unknown expansion: cannot line up positions
+                flat.extend(inner)
+            else:
+                flat.append(a)
+        for i, a in enumerate(flat):
+            args.append((c.spec_for_arg(i), self.spec_of(a), f"arg {i}"))
+        for kw in node.keywords:
+            if kw.arg is not None and kw.arg in c.specs:
+                args.append((c.specs[kw.arg], self.spec_of(kw.value), kw.arg))
+
+        for want, got, label in args:
+            if want is None or got is None:
+                continue
+            if len(want) != len(got):
+                self._find(
+                    node, "axes-rank",
+                    f"{fname}() {label}: contract [{','.join(want)}] is rank "
+                    f"{len(want)} but tracked value is [{','.join(got)}] "
+                    f"(rank {len(got)})",
+                )
+                continue
+            for pos, (w, g) in enumerate(zip(want, got)):
+                if w == "_" or g == "_" or w.isdigit() or g.isdigit():
+                    continue
+                if w == g:
+                    binding.setdefault(w, g)
+                    reverse.setdefault(g, w)
+                    continue
+                # caller speaks the contract's own vocabulary but at the
+                # wrong position: the transposition class
+                if g in c.vocab:
+                    self._find(
+                        node, "axes-mismatch",
+                        f"{fname}() {label}: axis {pos} is {g!r} but the "
+                        f"contract wants {w!r} ([{','.join(want)}]) — "
+                        "transposed dispatch?",
+                    )
+                    break
+                if binding.get(w, g) != g or reverse.get(g, w) != w:
+                    self._find(
+                        node, "axes-mismatch",
+                        f"{fname}() {label}: contract axis {w!r} binds both "
+                        f"{binding.get(w, reverse.get(g))!r} and {g!r} in one "
+                        "call — inconsistent dispatch",
+                    )
+                    break
+                binding[w] = g
+                reverse[g] = w
+
+    def _tuple_elts(self, node: ast.expr) -> Optional[List[ast.expr]]:
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return list(node.elts)
+        if isinstance(node, ast.Name) and node.id in self.tuples:
+            return self.tuples[node.id]
+        return None
+
+    # -- vmap closures ------------------------------------------------------ #
+
+    def _maybe_vmap_call(self, node: ast.Call) -> bool:
+        """``vmap(one, ...)(args)``: peel axis 0, analyze the closure."""
+        inner = node.func
+        if not isinstance(inner, ast.Call):
+            return False
+        iname = inner.func.attr if isinstance(inner.func, ast.Attribute) else (
+            inner.func.id if isinstance(inner.func, ast.Name) else None
+        )
+        if iname != "vmap" or not inner.args:
+            return False
+        target = inner.args[0]
+        if not isinstance(target, ast.Name):
+            return False
+        fn = self.local_fns.get(target.id)
+        if fn is None or self.depth >= 4:
+            return True  # it *was* a vmap call, just not analyzable
+        flat: List[ast.expr] = []
+        for a in node.args:
+            if isinstance(a, ast.Starred):
+                elts = self._tuple_elts(a.value)
+                if elts is None:
+                    return True
+                flat.extend(elts)
+            else:
+                flat.append(a)
+        params = _positional_params(fn)
+        seed: Dict[str, Spec] = {}
+        for p, a in zip(params, flat):
+            spec = self.spec_of(a)
+            if spec:
+                seed[p] = spec[1:]
+        sub = _FuncWalk(
+            self.sf, fn, self.contracts, self.findings, self.checker,
+            seed=seed, depth=self.depth + 1,
+        )
+        sub.local_fns.update(self.local_fns)
+        sub.run()
+        return True
+
+    # -- statement walk ----------------------------------------------------- #
+
+    def run(self) -> None:
+        self._block(self.fn.body)
+
+    def _block(self, stmts: Sequence[ast.stmt]) -> None:  # noqa: C901
+        for st in stmts:
+            if isinstance(st, ast.FunctionDef):
+                self.local_fns[st.name] = st
+                continue  # analyzed when vmapped/called, with real seeds
+            if isinstance(st, ast.Assign):
+                self._visit_value(st.value)
+                spec = self.spec_of(st.value)
+                for tgt in st.targets:
+                    if isinstance(tgt, ast.Name):
+                        self.env[tgt.id] = spec
+                        if isinstance(st.value, (ast.Tuple, ast.List)):
+                            self.tuples[tgt.id] = list(st.value.elts)
+                    elif isinstance(tgt, (ast.Tuple, ast.List)):
+                        for e in tgt.elts:
+                            if isinstance(e, ast.Name):
+                                self.env[e.id] = None
+            elif isinstance(st, ast.AnnAssign) and st.value is not None:
+                self._visit_value(st.value)
+                if isinstance(st.target, ast.Name):
+                    self.env[st.target.id] = self.spec_of(st.value)
+            elif isinstance(st, ast.AugAssign):
+                self._visit_value(st.value)
+            elif isinstance(st, (ast.Return, ast.Expr)):
+                if getattr(st, "value", None) is not None:
+                    self._visit_value(st.value)
+                    self.spec_of(st.value)  # reduction-rank checks fire here
+            elif isinstance(st, (ast.If, ast.While)):
+                self._visit_value(st.test)
+                self._block(st.body)
+                self._block(st.orelse)
+            elif isinstance(st, ast.For):
+                self._visit_value(st.iter)
+                if isinstance(st.target, ast.Name):
+                    self.env[st.target.id] = None
+                self._block(st.body)
+                self._block(st.orelse)
+            elif isinstance(st, ast.With):
+                for item in st.items:
+                    self._visit_value(item.context_expr)
+                self._block(st.body)
+            elif isinstance(st, ast.Try):
+                self._block(st.body)
+                for h in st.handlers:
+                    self._block(h.body)
+                self._block(st.orelse)
+                self._block(st.finalbody)
+
+    def _visit_value(self, node: ast.AST) -> None:
+        """Check every call in the expression (vmap closures included)."""
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                if self._maybe_vmap_call(sub):
+                    continue
+                self.check_call(sub)
+
+
+def _own_contract(fn: ast.FunctionDef) -> Optional[Contract]:
+    for dec in fn.decorator_list:
+        parsed = _parse_decorator(dec)
+        if parsed is not None:
+            return Contract(fn, *parsed)
+    return None
+
+
+# --------------------------------------------------------------------------- #
+
+
+@register
+class AxesChecker(Checker):
+    """Named-axis contract checking (see module docstring)."""
+
+    name = "axes"
+    rules = ("axes-missing", "axes-mismatch", "axes-rank")
+
+    def check_repo(
+        self, files: Sequence[SourceFile], root: Path, config: CheckConfig
+    ) -> Iterable[Finding]:
+        contracts = _collect_contracts(files)
+        findings: List[Finding] = []
+
+        for sf in files:
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.FunctionDef):
+                    continue
+                if (
+                    node.name in config.axes_required
+                    and _own_contract(node) is None
+                ):
+                    findings.append(
+                        sf.finding(
+                            node,
+                            "axes-missing",
+                            f"dispatch surface {node.name}() must declare "
+                            "its axis contract with @annotations.axes(...)",
+                            self.name,
+                        )
+                    )
+
+        # flow-sensitive walk of every module-level function and method
+        for sf in files:
+            for node in sf.tree.body:
+                fns: List[ast.FunctionDef] = []
+                if isinstance(node, ast.FunctionDef):
+                    fns.append(node)
+                elif isinstance(node, ast.ClassDef):
+                    fns.extend(
+                        n for n in node.body if isinstance(n, ast.FunctionDef)
+                    )
+                for fn in fns:
+                    walk = _FuncWalk(sf, fn, contracts, findings, self.name)
+                    walk.run()
+        return findings

@@ -86,6 +86,25 @@ class CheckConfig:
     # jit-hygiene: jitted entry points whose array arguments are staging
     # planes and must be donated (the device-resident pipeline contract)
     donate_required: Tuple[str, ...] = ("_analyze_pipeline_jax",)
+    # simdim: dispatch-surface functions that must declare named-axis
+    # contracts with @annotations.axes(...) (checked under src/repro only)
+    axes_required: Tuple[str, ...] = (
+        "_analyze_jax",
+        "_analyze_batch_jax",
+        "_analyze_multi_jax",
+        "_analyze_fleet_jax",
+        "_analyze_sweep_jax",
+        "_analyze_pipeline_jax",
+        "qos_cascade_dyn",
+        "attention",
+        "ssd",
+        "congestion_queue",
+        "congestion_cascade",
+        "qos_congestion_cascade",
+        "two_run_merge",
+        "staging_sort",
+        "chain_cascade",
+    )
     # contracts: (impl file, summary-owning class, test file, test function)
     summary_contracts: Tuple[Tuple[str, str, str, str], ...] = (
         (

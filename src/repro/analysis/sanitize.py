@@ -1,6 +1,6 @@
 """Runtime sanitizers — the dynamic half of simlint.
 
-Two context managers, both usable standalone or as test fixtures (see
+Three context managers, all usable standalone or as test fixtures (see
 ``tests/conftest.py``, gated by ``SIMLINT_SANITIZE=1``):
 
 * :class:`RecompileSanitizer` — fails a scope that triggers steady-state
@@ -17,10 +17,22 @@ Two context managers, both usable standalone or as test fixtures (see
   graph as a potential deadlock.  Non-blocking probe acquires (e.g.
   ``Condition._is_owned``) are tracked for held-set bookkeeping but add no
   edges — a ``try``-acquire cannot deadlock.
+* :class:`AxisSanitizer` — arms runtime validation of the
+  :func:`repro.analysis.annotations.axes` shape contracts.  While the
+  scope is active, every call to an ``@axes``-annotated function (eager
+  *and* at jit trace time, where traced arguments carry concrete shapes)
+  unifies the declared named axes against the actual ``.shape`` tuples and
+  raises :class:`~repro.analysis.annotations.AxisContractError` on a
+  transposed or mismatched dispatch.  Outside the scope the wrappers check
+  one module-global integer and call straight through.
 
-Both sanitizers only observe objects *created inside* their scope: an
-engine constructed before ``__enter__`` keeps its raw locks.  That is the
-intended test shape — construct the system under test inside the scope.
+The lock/recompile sanitizers only observe objects *created inside* their
+scope: an engine constructed before ``__enter__`` keeps its raw locks.
+That is the intended test shape — construct the system under test inside
+the scope.  The axis sanitizer has no such restriction (contracts live on
+the functions, not on instances), but jitted callables *traced before* the
+scope replay their cached executables without re-entering the Python
+wrapper — validate with fresh shapes or eager calls.
 """
 
 from __future__ import annotations
@@ -31,6 +43,7 @@ import threading
 from typing import Dict, List, Optional, Tuple
 
 __all__ = [
+    "AxisSanitizer",
     "LockOrderError",
     "LockOrderSanitizer",
     "RecompileError",
@@ -411,3 +424,38 @@ class LockOrderSanitizer:
                 witness = self.edges.get((a, b), "")
                 lines.append(f"  {a} -> {b}    [{witness}]")
         return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------- #
+# AxisSanitizer
+# --------------------------------------------------------------------------- #
+
+
+class AxisSanitizer:
+    """Arm runtime checking of ``@axes`` named-axis contracts for a scope.
+
+    A lifecycle wrapper around
+    :class:`repro.analysis.annotations.axes_validation` that matches the
+    other sanitizers' shape.  Default mode raises
+    :class:`~repro.analysis.annotations.AxisContractError` at the violating
+    call; ``record_only=True`` collects violation messages into
+    ``self.violations`` and, on a clean body exit, raises nothing — the
+    caller inspects the list (the conftest fixture uses the raising mode).
+    """
+
+    def __init__(self, record_only: bool = False):
+        self.record_only = bool(record_only)
+        self.violations: List[str] = []
+        self._scope = None
+
+    def __enter__(self) -> "AxisSanitizer":
+        from .annotations import axes_validation
+
+        sink = self.violations if self.record_only else None
+        self._scope = axes_validation(sink=sink).__enter__()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if self._scope is not None:
+            self._scope.__exit__(exc_type, exc, tb)
+            self._scope = None

@@ -75,6 +75,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis.annotations import axes
 from .aot import AotDispatchCache
 from .events import EventStager, MemEvents
 from .topology import FlatTopology
@@ -565,6 +566,10 @@ def plan_chain(flat: FlatTopology) -> Optional[ChainPlan]:
     return ChainPlan(enter_stage=enter, stage_order=stage_order)
 
 
+@axes(
+    "B,W", "B,W", "B,N", "B,N", "B,N", "B,N", "B", "B,V", "V", "",
+    "V,S", "S", "S",
+)
 def _analyze_pipeline_jax(
     t_pack: jnp.ndarray,  # [B, W] f32 per-stage packed sorted runs (+inf pads) — DONATED
     idx_pack: jnp.ndarray,  # [B, W] i32 positions into the staged row (-1 pads) — DONATED
@@ -663,6 +668,11 @@ def _analyze_pipeline_jax(
     return summed + (outs[10], outs[11])
 
 
+@axes(
+    "N", "N", "N", "N", "N", "N", "N", "V", "V", "V", "",
+    "V,S", "S", "S", "S", "S,C",
+    bw_window_ns="",
+)
 def _analyze_jax(
     t: jnp.ndarray,  # [N] f32 epoch-relative ns, TIME-SORTED (padded: 0, last)
     pool: jnp.ndarray,  # [N] i32 (padded entries: 0)
@@ -899,6 +909,10 @@ def _analyze_jax(
     )
 
 
+@axes(
+    "B,N", "B,N", "B,N", "B,N", "B,N", "B,N", "B,N", "B", "B,V",
+    "V", "V", "", "V,S", "S", "S", "S", "S,C",
+)
 def _analyze_batch_jax(
     t: jnp.ndarray,  # [B, N]
     pool: jnp.ndarray,  # [B, N]
@@ -951,6 +965,10 @@ def _analyze_batch_jax(
     return jax.tree.map(lambda x: x.sum(axis=0), outs)
 
 
+@axes(
+    "K,B,N", "K,B,N", "K,B,N", "K,B,N", "K,B,N", "K,B,N", "K,B,N",
+    "K,B", "K,B,V", "V", "V", "", "V,S", "S", "S", "S", "S,C",
+)
 def _analyze_multi_jax(
     t: jnp.ndarray,  # [K, B, N] K sessions' stacked epoch batches
     pool: jnp.ndarray,  # [K, B, N]
@@ -1000,6 +1018,10 @@ def _analyze_multi_jax(
     )
 
 
+@axes(
+    "K,B,N", "K,B,N", "K,B,N", "K,B,N", "K,B,N", "K,B,N", "K,B,N",
+    "K,B", "K,B,V", "V", "K,V", "K", "V,S", "K,S", "K,S", "K,S", "K,S,C",
+)
 def _analyze_fleet_jax(
     t: jnp.ndarray,  # [K, B, N] K racks' stacked epoch batches
     pool: jnp.ndarray,  # [K, B, N]
@@ -1055,6 +1077,11 @@ def _analyze_fleet_jax(
     )
 
 
+@axes(
+    "G,B,N", "G,B,N", "G,B,N", "G,B,N", "G,B,N", "G,B,N", "G,B",
+    "U", "U,R", "U,S", "U,S", "U,S,C", "R", "K", "K", "K,R", "K,B,V",
+    "K,V", "K", "K,S", "V", "V,S",
+)
 def _analyze_sweep_jax(
     t: jnp.ndarray,  # [G, B, N] f32 sorted epoch times per granularity group
     nbytes: jnp.ndarray,  # [G, B, N]

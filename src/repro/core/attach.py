@@ -71,6 +71,7 @@ from .policy import PlacementPolicy, capacity_check
 from .timer import EpochSchedule
 from .topology import Topology
 from .tracer import HardwareModel, Phase, TPU_V5E, synthesize_step_trace
+from .units import ns_to_s
 
 __all__ = ["CXLMemSim", "AttachedProgram", "SimReport"]
 
@@ -363,10 +364,10 @@ class AttachedProgram(EngineClient):
         with self._report_lock:
             r = self._report
             r.epochs += n_epochs
-            r.latency_s += bd.latency_ns * 1e-9
-            r.congestion_s += bd.congestion_ns * 1e-9
-            r.bandwidth_s += bd.bandwidth_ns * 1e-9
-            r.coherency_s += coh_ns * 1e-9
+            r.latency_s += ns_to_s(bd.latency_ns)
+            r.congestion_s += ns_to_s(bd.congestion_ns)
+            r.bandwidth_s += ns_to_s(bd.bandwidth_ns)
+            r.coherency_s += ns_to_s(coh_ns)
             r.per_pool_latency_ns += bd.per_pool_latency_ns
             r.per_switch_congestion_ns += bd.per_switch_congestion_ns
             r.per_switch_bandwidth_ns += bd.per_switch_bandwidth_ns
@@ -376,7 +377,7 @@ class AttachedProgram(EngineClient):
                     r.per_class_congestion_ns += pcc
                 else:  # qos-off breakdown on a multi-class fabric: all class 0
                     r.per_class_congestion_ns[0] += float(pcc.sum())
-            r.simulated_s += delay_ns * 1e-9
+            r.simulated_s += ns_to_s(delay_ns)
             r.analyzer_s += analyzer_s
             if self._handle is not None:
                 fold_dispatch_stats(
@@ -435,9 +436,9 @@ class AttachedProgram(EngineClient):
             if self.sim.inject_delays and delay_ns > 0:
                 # the paper's delay injection: the host program observes the
                 # simulated-topology execution speed
-                time.sleep(delay_ns * 1e-9)
+                time.sleep(ns_to_s(delay_ns))
                 with self._report_lock:
-                    self._report.injected_sleep_s += delay_ns * 1e-9
+                    self._report.injected_sleep_s += ns_to_s(delay_ns)
         return out
 
     def run(self, n_steps: int, *args, **kwargs) -> SimReport:

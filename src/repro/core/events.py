@@ -40,6 +40,9 @@ __all__ = [
 
 CACHELINE_BYTES = 64
 PAGE_BYTES = 4096
+# synthetic-trace burst width as a *fraction* of the epoch (dimensionless
+# tuning knob, not a ns conversion)
+_BURST_SPREAD_FRAC = 1e-3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -652,7 +655,8 @@ def synthetic_trace(
         n_bursts = max(1, int(n_events * (1 - burstiness) / 16) + 1)
         centers = rng.uniform(0, epoch_ns, size=n_bursts)
         t = rng.choice(centers, size=n_events) + rng.exponential(
-            scale=max(epoch_ns * (1 - burstiness) * 1e-3, 1.0), size=n_events
+            scale=max(epoch_ns * (1 - burstiness) * _BURST_SPREAD_FRAC, 1.0),
+            size=n_events
         )
         t = np.clip(t, 0, epoch_ns)
     else:

@@ -76,6 +76,7 @@ from .policy import PlacementPolicy
 from .timer import EpochSchedule
 from .topology import Topology
 from .tracer import HardwareModel, Phase, TPU_V5E, synthesize_step_trace
+from .units import ns_to_s
 
 __all__ = ["FabricReport", "FabricSession", "HostClock", "Tenant"]
 
@@ -428,7 +429,7 @@ class FabricSession(EngineClient):
             if self._native_cache[h] is None:
                 # native pacing depends on phase flops/bytes only, never on
                 # residency, so it survives migration-forced re-synthesis
-                self._native_cache[h] = float(sum(native_ns)) * 1e-9
+                self._native_cache[h] = ns_to_s(float(sum(native_ns)))
             self._trace_cache[h] = (traces, self._native_cache[h])
         return self._trace_cache[h]
 
@@ -536,10 +537,10 @@ class FabricSession(EngineClient):
             r.rounds += 1
             r.epochs += n_epochs
             r.analyzer_s += analyzer_s
-            r.latency_s += bd.latency_ns * 1e-9
-            r.congestion_s += bd.congestion_ns * 1e-9
-            r.bandwidth_s += bd.bandwidth_ns * 1e-9
-            r.coherency_s += float(miss_ns.sum()) * 1e-9
+            r.latency_s += ns_to_s(bd.latency_ns)
+            r.congestion_s += ns_to_s(bd.congestion_ns)
+            r.bandwidth_s += ns_to_s(bd.bandwidth_ns)
+            r.coherency_s += ns_to_s(float(miss_ns.sum()))
             if bi_messages is not None:
                 r.bi_messages = bi_messages
             if moved_bytes is not None:
@@ -564,10 +565,10 @@ class FabricSession(EngineClient):
                     r, getattr(self._analyzer, "last_dispatch", None), 1
                 )
             for h, hc in enumerate(r.hosts):
-                hc.latency_s += float(bd.per_host_latency_ns[h]) * 1e-9
-                hc.congestion_s += float(bd.per_host_congestion_ns[h]) * 1e-9
-                hc.bandwidth_s += float(bd.per_host_bandwidth_ns[h]) * 1e-9
-                hc.coherency_s += float(miss_ns[h]) * 1e-9
+                hc.latency_s += ns_to_s(float(bd.per_host_latency_ns[h]))
+                hc.congestion_s += ns_to_s(float(bd.per_host_congestion_ns[h]))
+                hc.bandwidth_s += ns_to_s(float(bd.per_host_bandwidth_ns[h]))
+                hc.coherency_s += ns_to_s(float(miss_ns[h]))
 
     def round(self) -> Optional[DelayBreakdown]:
         """Run one co-scheduled round.  In the default overlapped mode the

@@ -79,6 +79,7 @@ from .tracer import (
     skeleton_to_events,
     synthesize_skeleton,
 )
+from .units import bytes_to_gib, gib_to_bytes
 
 __all__ = [
     "FleetPoint",
@@ -125,7 +126,7 @@ def synthetic_tenant(
     makes bin-packing and stranding interesting.
     """
     rng = np.random.default_rng(seed)
-    total = gib * 2**30 * float(rng.uniform(0.7, 1.5))
+    total = gib_to_bytes(gib) * float(rng.uniform(0.7, 1.5))
     regions = RegionMap()
     regions.alloc(f"{name}/params", int(total * 0.22), "param")
     regions.alloc(f"{name}/acts", int(total * 0.18), "activation")
@@ -230,7 +231,7 @@ class FleetReport:
             "n_hosts": self.n_hosts,
             "n_tenants": self.n_tenants,
             "offload_fraction": self.offload_fraction,
-            "stranded_recovered_gb": self.stranded_recovered_bytes / 2**30,
+            "stranded_recovered_gb": bytes_to_gib(self.stranded_recovered_bytes),
             "p99_slowdown": self.p99_slowdown(),
             "mean_slowdown": self.mean_slowdown(),
             "devices_used": self.devices_used,
@@ -475,16 +476,16 @@ class FleetSim:
                 spill_b += r.nbytes
             if resident() > free_local[rack, host]:
                 raise ValueError(
-                    f"tenant {t.name!r} needs {resident() / 2**30:.1f} GiB "
+                    f"tenant {t.name!r} needs {bytes_to_gib(resident()):.1f} GiB "
                     f"resident but host ({rack}, {host}) has only "
-                    f"{free_local[rack, host] / 2**30:.1f} GiB local DRAM free "
+                    f"{bytes_to_gib(free_local[rack, host]):.1f} GiB local DRAM free "
                     "— its pinned classes alone overflow the host"
                 )
             if spill_b > free_shared[rack]:
                 raise ValueError(
                     f"rack {rack}'s shared expander is out of capacity "
-                    f"({spill_b / 2**30:.1f} GiB needed, "
-                    f"{free_shared[rack] / 2**30:.1f} GiB free) placing "
+                    f"({bytes_to_gib(spill_b):.1f} GiB needed, "
+                    f"{bytes_to_gib(free_shared[rack]):.1f} GiB free) placing "
                     f"tenant {t.name!r}"
                 )
             free_local[rack, host] -= resident()
@@ -724,7 +725,7 @@ class FleetSim:
             points.append(
                 FleetPoint(
                     offload_fraction=f,
-                    stranded_recovered_gb=rep.stranded_recovered_bytes / 2**30,
+                    stranded_recovered_gb=bytes_to_gib(rep.stranded_recovered_bytes),
                     p99_slowdown=rep.p99_slowdown(),
                     mean_slowdown=rep.mean_slowdown(),
                     report=rep,

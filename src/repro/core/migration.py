@@ -47,6 +47,7 @@ import numpy as np
 
 from .events import PAGE_BYTES, MemEvents, RegionMap, concat_events
 from .topology import FlatTopology
+from .units import BYTES_PER_GIB
 
 __all__ = ["LocalBudget", "MigrationConfig", "MigrationSimulator"]
 
@@ -56,7 +57,7 @@ class MigrationConfig:
     mode: str = "software"  # 'software' | 'hardware' | 'off'
     promote_threshold: float = 64.0  # accesses/epoch to promote a region
     demote_threshold: float = 4.0  # accesses/epoch below which to demote
-    local_budget_bytes: int = 16 * 2**30
+    local_budget_bytes: int = 16 * BYTES_PER_GIB
     reaction_ns: float = 0.0  # hardware mode: reaction latency before moves
     granularity_bytes: int = PAGE_BYTES  # sw: pages; hw typically cachelines
     # where cold regions whose home *is* local DRAM demote to (pool name or

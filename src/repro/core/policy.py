@@ -32,6 +32,11 @@ import numpy as np
 
 from .events import CACHELINE_BYTES, PAGE_BYTES, Region, RegionMap
 from .topology import FlatTopology
+from .units import bytes_to_gib
+
+# tie-break epsilon for byte-share deficits (NOT a unit conversion)
+_EPS_BYTES = 1e-9
+
 
 __all__ = [
     "PlacementPolicy",
@@ -241,7 +246,7 @@ class InterleavePolicy(PlacementPolicy):
             if self.classes is not None and r.tensor_class not in self.classes:
                 r.pool = 0
                 continue
-            total = placed_bytes.sum() + 1e-9
+            total = placed_bytes.sum() + _EPS_BYTES
             deficit = w - placed_bytes / total
             k = self._pick(deficit)
             r.pool = idxs[k]
@@ -267,7 +272,7 @@ class InterleavePolicy(PlacementPolicy):
         )
         placed_bytes = np.zeros((len(idxs),), np.float64)
         for i in sel:
-            total = placed_bytes.sum() + 1e-9
+            total = placed_bytes.sum() + _EPS_BYTES
             deficit = w - placed_bytes / total
             k = self._pick(deficit)
             out[i] = idxs[k]
@@ -429,7 +434,7 @@ def capacity_check(regions: RegionMap, flat: FlatTopology) -> Dict[str, float]:
         report[name] = per_pool[i] / cap if cap > 0 else 0.0
         if per_pool[i] > cap:
             raise ValueError(
-                f"pool {name} over capacity: {per_pool[i] / 2**30:.1f} GiB "
-                f"placed, {cap / 2**30:.1f} GiB available"
+                f"pool {name} over capacity: {bytes_to_gib(per_pool[i]):.1f} GiB "
+                f"placed, {bytes_to_gib(cap):.1f} GiB available"
             )
     return report

@@ -24,6 +24,7 @@ import re
 from typing import Dict
 
 from .tracer import HardwareModel, TPU_V5E
+from .units import gbps_to_bytes_per_s
 
 __all__ = [
     "RooflineTerms",
@@ -202,8 +203,8 @@ def roofline_terms(
     """All inputs are per-device quantities from the compiled SPMD module."""
     return RooflineTerms(
         compute_s=hlo_flops / hw.peak_flops,
-        memory_s=hlo_bytes / (hw.hbm_gbps * 1e9),
-        collective_s=collective_bytes / (hw.ici_gbps * 1e9),
+        memory_s=hlo_bytes / gbps_to_bytes_per_s(hw.hbm_gbps),
+        collective_s=collective_bytes / gbps_to_bytes_per_s(hw.ici_gbps),
         hlo_flops=hlo_flops,
         hlo_bytes=hlo_bytes,
         collective_bytes=collective_bytes,

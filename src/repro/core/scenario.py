@@ -63,6 +63,7 @@ from .tracer import (
     skeleton_to_events,
     synthesize_skeleton,
 )
+from .units import bytes_to_gib, bytes_to_mib, ns_to_ms
 
 __all__ = ["Scenario", "ScenarioSuite", "SweepResult"]
 
@@ -97,7 +98,7 @@ class Scenario:
         parts = [self.policy.describe()]
         parts.append(self.topology.describe() if self.topology else "base")
         if self.cache is not None:
-            parts.append(f"cache={self.cache.capacity_bytes / 2**20:g}MiB")
+            parts.append(f"cache={bytes_to_mib(self.cache.capacity_bytes):g}MiB")
         if self.qos is not None:
             parts.append(self.qos.describe())
         return "|".join(parts)
@@ -175,10 +176,10 @@ class SweepResult:
         return [
             {
                 "scenario": s.label(),
-                "latency_ms": b.latency_ns / 1e6,
-                "congestion_ms": b.congestion_ns / 1e6,
-                "bandwidth_ms": b.bandwidth_ns / 1e6,
-                "total_ms": b.total_ns / 1e6,
+                "latency_ms": ns_to_ms(b.latency_ns),
+                "congestion_ms": ns_to_ms(b.congestion_ns),
+                "bandwidth_ms": ns_to_ms(b.bandwidth_ns),
+                "total_ms": ns_to_ms(b.total_ns),
                 "slowdown": float(slow[i]),
                 "feasible": bool(self.feasible[i]),
                 "devices_used": self.devices_used,
@@ -451,8 +452,8 @@ class ScenarioSuite:
             raise ValueError(
                 f"scenario {scenarios[k].label()!r}: pool "
                 f"{flat.pool_names[over]} over capacity "
-                f"({util_bytes[k, over] / 2**30:.1f} GiB placed, "
-                f"{cap[over] / 2**30:.1f} GiB available)"
+                f"({bytes_to_gib(util_bytes[k, over]):.1f} GiB placed, "
+                f"{bytes_to_gib(cap[over]):.1f} GiB available)"
             )
         if flat.host_reachable is not None and not flat.host_reachable.all():
             bad = ~flat.host_reachable[0, assign]

@@ -20,6 +20,7 @@ from typing import List
 import numpy as np
 
 from .events import MemEvents
+from .units import NS_PER_MS
 
 __all__ = ["EpochSchedule", "slice_by_quantum"]
 
@@ -29,7 +30,7 @@ class EpochSchedule:
     """How execution is divided into epochs."""
 
     mode: str = "step"  # 'step' | 'layer' | 'quantum'
-    quantum_ns: float = 1e6  # used when mode == 'quantum'
+    quantum_ns: float = float(NS_PER_MS)  # 1 ms; used when mode == 'quantum'
 
     def __post_init__(self):
         if self.mode not in ("step", "layer", "quantum"):

@@ -31,6 +31,8 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .units import BYTES_PER_GIB, bytes_to_gib, gib_to_bytes
+
 __all__ = [
     "DISCIPLINES",
     "DISCIPLINE_CODES",
@@ -342,7 +344,7 @@ class Topology:
             path = " -> ".join(s.name for s in self.switch_path(p)) or "(direct)"
             lines.append(
                 f"  pool[{self.pool_index(p.name)}] {p.name}: lat={p.latency_ns}ns "
-                f"bw={p.bandwidth_gbps}GB/s cap={p.capacity_bytes / 2**30:.1f}GiB "
+                f"bw={p.bandwidth_gbps}GB/s cap={bytes_to_gib(p.capacity_bytes):.1f}GiB "
                 f"path={path} total_lat={self.pool_total_latency_ns(p):.1f}ns"
             )
         for s in self.switches:
@@ -758,7 +760,7 @@ def local_only_topology(capacity_gib: float = 96.0) -> Topology:
                 "local_dram",
                 latency_ns=88.9,
                 bandwidth_gbps=76.8,  # DDR5-4800 dual channel
-                capacity_bytes=int(capacity_gib * 2**30),
+                capacity_bytes=int(gib_to_bytes(capacity_gib)),
                 is_local=True,
             )
         ]
@@ -777,10 +779,10 @@ def figure1_topology() -> Topology:
     """
     return Topology(
         pools=[
-            Pool("local_dram", 88.9, 76.8, int(96 * 2**30), is_local=True),
-            Pool("cxl_pool1", 150.0, 32.0, int(128 * 2**30), parent="switch0"),
-            Pool("cxl_pool2", 180.0, 32.0, int(256 * 2**30), parent="switch1"),
-            Pool("cxl_pool3", 180.0, 32.0, int(256 * 2**30), parent="switch1"),
+            Pool("local_dram", 88.9, 76.8, 96 * BYTES_PER_GIB, is_local=True),
+            Pool("cxl_pool1", 150.0, 32.0, 128 * BYTES_PER_GIB, parent="switch0"),
+            Pool("cxl_pool2", 180.0, 32.0, 256 * BYTES_PER_GIB, parent="switch1"),
+            Pool("cxl_pool3", 180.0, 32.0, 256 * BYTES_PER_GIB, parent="switch1"),
         ],
         switches=[
             Switch("switch0", latency_ns=70.0, bandwidth_gbps=64.0, stt_ns=2.0),
@@ -810,7 +812,7 @@ def chained_topology(depth: int = 8, attach_bw: float = 32.0) -> Topology:
     """
     if depth < 1:
         raise ValueError("chained_topology needs depth >= 1")
-    pools = [Pool("local_dram", 88.9, 76.8, int(96 * 2**30), is_local=True)]
+    pools = [Pool("local_dram", 88.9, 76.8, 96 * BYTES_PER_GIB, is_local=True)]
     switches = []
     for d in range(depth):
         switches.append(
@@ -827,7 +829,7 @@ def chained_topology(depth: int = 8, attach_bw: float = 32.0) -> Topology:
                 f"exp{d}",
                 170.0,
                 attach_bw,
-                int(256 * 2**30),
+                256 * BYTES_PER_GIB,
                 parent=f"sw{d}",
             )
         )
@@ -842,12 +844,12 @@ def two_tier_topology(
     """Simple two-tier topology: local DRAM + one direct CXL expander."""
     return Topology(
         pools=[
-            Pool("local_dram", 88.9, 76.8, int(96 * 2**30), is_local=True),
+            Pool("local_dram", 88.9, 76.8, 96 * BYTES_PER_GIB, is_local=True),
             Pool(
                 "cxl_pool",
                 cxl_latency_ns,
                 cxl_bandwidth_gbps,
-                int(cxl_capacity_gib * 2**30),
+                int(gib_to_bytes(cxl_capacity_gib)),
                 parent="sw",
             ),
         ],
@@ -878,12 +880,12 @@ def pooled_topology(
     weights = tuple(class_weights) if class_weights is not None else None
     return Topology(
         pools=[
-            Pool("local_dram", 88.9, 76.8, int(96 * 2**30), is_local=True),
+            Pool("local_dram", 88.9, 76.8, 96 * BYTES_PER_GIB, is_local=True),
             Pool(
                 "shared_pool",
                 cxl_latency_ns,
                 cxl_bandwidth_gbps,
-                int(cxl_capacity_gib * 2**30),
+                int(gib_to_bytes(cxl_capacity_gib)),
                 parent="fabric_sw",
             ),
         ],

@@ -46,6 +46,7 @@ from typing import Dict, List, Sequence, Tuple
 import numpy as np
 
 from .events import MemEvents, RegionMap
+from .units import s_to_ns
 
 __all__ = [
     "Access",
@@ -93,7 +94,7 @@ class HardwareModel:
 
     def phase_ns(self, flops: float, bytes_: float) -> float:
         """Roofline-paced duration: max of compute time and memory time."""
-        t_c = flops / self.peak_flops * 1e9
+        t_c = s_to_ns(flops / self.peak_flops)
         t_m = bytes_ / self.hbm_gbps  # GB/s == bytes/ns
         return max(t_c, t_m, 1.0)
 

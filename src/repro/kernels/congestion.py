@@ -62,6 +62,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..analysis.annotations import axes
 from . import ref as _ref
 
 __all__ = [
@@ -285,6 +286,7 @@ def _pad_to_block(block, t_sorted, route_bits, hosts=None):
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
+@axes("N", route_bits="N", stts="S")
 def congestion_cascade(
     t_sorted: jnp.ndarray,  # [N] f32, globally time-sorted arrivals
     route_bits: jnp.ndarray,  # [N] i32, bit s set iff event traverses stage s
@@ -344,6 +346,7 @@ def congestion_cascade(
 
 
 @functools.partial(jax.jit, static_argnames=("n_hosts", "block", "interpret"))
+@axes("N", route_bits="N", hosts="N", stts="S")
 def congestion_cascade_hosts(
     t_sorted: jnp.ndarray,  # [N] f32, globally time-sorted arrivals
     route_bits: jnp.ndarray,  # [N] i32, bit s set iff event traverses stage s
@@ -535,6 +538,7 @@ def _qos_cascade_body(n_classes, *refs):
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
+@axes("N", route_bits="N", qos="N", stts="S", disc_code="S", class_weights="S,C")
 def qos_congestion_cascade(
     t_sorted: jnp.ndarray,  # [N] f32, globally time-sorted arrivals
     route_bits: jnp.ndarray,  # [N] i32, bit s set iff event traverses stage s

@@ -20,6 +20,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..analysis.annotations import axes
 from . import ref
 from .congestion import congestion_cascade as _cascade_pallas
 from .congestion import congestion_cascade_hosts as _cascade_hosts_pallas
@@ -78,6 +79,7 @@ def _resolve(impl: Optional[str]) -> str:
 # --------------------------------------------------------------------------- #
 
 
+@axes("B,H,Sq,D", k="B,Hk,Sk,D", v="B,Hk,Sk,D")
 def attention(
     q: jnp.ndarray,
     k: jnp.ndarray,
@@ -101,6 +103,7 @@ def attention(
     )
 
 
+@axes("B,L,H,P", dt="B,L,H", A="H", Bm="B,L,N", Cm="B,L,N")
 def ssd(
     x: jnp.ndarray,
     dt: jnp.ndarray,
@@ -117,6 +120,7 @@ def ssd(
     return _ssd_pallas(x, dt, A, Bm, Cm, chunk=chunk, interpret=(i == "pallas_interpret"))
 
 
+@axes("N", mask="N")
 def congestion_queue(
     t_sorted: jnp.ndarray,
     mask: jnp.ndarray,
@@ -134,6 +138,7 @@ def congestion_queue(
     )
 
 
+@axes("N", route_bits="N", stts="S", hosts="N")
 def congestion_cascade(
     t_sorted: jnp.ndarray,
     route_bits: jnp.ndarray,
@@ -172,6 +177,10 @@ def congestion_cascade(
     )
 
 
+@axes(
+    "N", route_bits="N", stts="S", qos="N", disc_code="S",
+    class_weights="S,C", hosts="N",
+)
 def qos_congestion_cascade(
     t_sorted: jnp.ndarray,
     route_bits: jnp.ndarray,
@@ -209,6 +218,7 @@ def qos_congestion_cascade(
     return t_fin, idx, delay[:, None, :]
 
 
+@axes("N", lead="N")
 def two_run_merge(x, lead, *payloads, impl: Optional[str] = None):
     """Stable merge of two interleaved sorted runs (envelope formulation).
 
@@ -220,6 +230,7 @@ def two_run_merge(x, lead, *payloads, impl: Optional[str] = None):
     return ref.two_run_merge(x, lead, *payloads)
 
 
+@axes("N")
 def staging_sort(x, run_caps, *payloads, impl: Optional[str] = None):
     """On-device stable sort of concatenated sorted runs (merge tree of
     :func:`two_run_merge` rounds); bitwise-equal to a host stable argsort of
@@ -228,6 +239,7 @@ def staging_sort(x, run_caps, *payloads, impl: Optional[str] = None):
     return ref.staging_sort(x, run_caps, *payloads)
 
 
+@axes("W", idx_pack="W", stts="D")
 def chain_cascade(t_pack, idx_pack, stts, seg_caps, impl: Optional[str] = None):
     """Compact suffix cascade over per-stage packed sorted runs — the
     device-resident pipeline's fused merge+scan.  Ref-only, as for

@@ -10,6 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..analysis.annotations import axes
+
 __all__ = [
     "chain_cascade",
     "merge_sorted_runs",
@@ -105,6 +107,7 @@ def merge_sorted_runs(
     return tuple(jnp.zeros_like(p).at[pos].set(p) for p in (x,) + payloads)
 
 
+@axes("N", lead="N")
 def two_run_merge(x: jnp.ndarray, lead: jnp.ndarray, *payloads: jnp.ndarray):
     """Merge two interleaved sorted runs by rank arithmetic (no compaction).
 
@@ -150,6 +153,7 @@ def two_run_merge(x: jnp.ndarray, lead: jnp.ndarray, *payloads: jnp.ndarray):
     return tuple(jnp.take(p, src) for p in (x,) + payloads)
 
 
+@axes("N")
 def staging_sort(x: jnp.ndarray, run_caps, *payloads: jnp.ndarray):
     """Sort R concatenated time-sorted runs fully on device.
 
@@ -206,6 +210,7 @@ def staging_sort(x: jnp.ndarray, run_caps, *payloads: jnp.ndarray):
     return arrs
 
 
+@axes("W", idx_pack="W", stts="D")
 def chain_cascade(
     t_pack: jnp.ndarray,  # [W] f32 depth-packed times (+inf pads per segment)
     idx_pack: jnp.ndarray,  # [W] i32 original slot of each event (-1 pads)
@@ -649,6 +654,10 @@ def _tropical_stage(ts, m, q_cur, disc, stt, w_row):
     return jnp.maximum(ts, fin_c)
 
 
+@axes(
+    "N", route_bits="N", stts="S", qos="N", disc_code="S",
+    class_weights="S,C", hosts="N",
+)
 def qos_cascade_dyn(
     t_sorted: jnp.ndarray,  # [N] f32, globally time-sorted arrivals
     route_bits: jnp.ndarray,  # [N] i32, bit s set iff event traverses stage s

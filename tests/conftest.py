@@ -24,7 +24,8 @@ def rng():
 @pytest.fixture(autouse=True)
 def _simlint_sanitizers(request):
     """Opt-in sanitizer harness: ``SIMLINT_SANITIZE=1 pytest ...`` runs
-    every test under the lock-order sanitizer (raising on cycles) and the
+    every test under the lock-order sanitizer (raising on cycles), the
+    axis sanitizer (raising on @axes contract violations), and the
     recompile sanitizer in record-only mode (first-compile-per-shape is
     legitimate inside a test; the steady-state assertions live in
     tests/test_simlint.py).  Off by default: wrapping lock creation has
@@ -38,11 +39,16 @@ def _simlint_sanitizers(request):
         # their own scopes
         yield
         return
-    from repro.analysis.sanitize import LockOrderSanitizer, RecompileSanitizer
+    from repro.analysis.sanitize import (
+        AxisSanitizer,
+        LockOrderSanitizer,
+        RecompileSanitizer,
+    )
 
     with LockOrderSanitizer():
         with RecompileSanitizer(record_only=True):
-            yield
+            with AxisSanitizer():
+                yield
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,50 @@
+"""Seeded violations: all three axes rules in one file.
+
+axes-missing (a required dispatch surface with no contract), axes-mismatch
+(transposed dispatch — caller axes are the contract's own vocabulary at
+the wrong positions; inconsistent axis binding across one call's
+arguments), axes-rank (rank contradiction at a call site; reduction axis
+outside the tracked rank).
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.annotations import axes
+
+
+# BUG axes-missing: _analyze_multi_jax is a dispatch surface and must
+# declare its contract
+def _analyze_multi_jax(xs, stts):
+    return xs.sum() + stts.sum()
+
+
+@axes("K,B,N", stts="K,S")
+def cascade(xs, stts):
+    return xs.sum(axis=-1) + stts.sum(axis=-1)[:, None]
+
+
+@axes("K,B,N", stts="K,S")
+def dispatch_transposed(t, stts):
+    # BUG axes-mismatch: the [K,B,N] plane is fed transposed as [B,K,N]
+    tt = jnp.transpose(t, (1, 0, 2))
+    return cascade(tt, stts)
+
+
+@axes("G,E,N", stts="E,S")
+def dispatch_inconsistent(t, stts):
+    # BUG axes-mismatch: renaming is legal, but one call may not bind the
+    # contract's K to both G (via t) and E (via stts)
+    return cascade(t, stts)
+
+
+@axes("K,B,N")
+def dispatch_wrong_rank(t):
+    # BUG axes-rank: contract wants [K,B,N] (rank 3), flattened is rank 1
+    flat = t.sum(axis=0)
+    return cascade(flat, flat)
+
+
+@axes("B,N")
+def reduce_out_of_range(x):
+    # BUG axes-rank: axis=2 does not exist on a [B,N] operand
+    return x.sum(axis=2)

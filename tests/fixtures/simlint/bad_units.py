@@ -1,0 +1,37 @@
+"""Seeded violations: all three units rules in one file.
+
+unit-mismatch (cross-unit add/compare, wrong helper input, contradicting
+suffix assignment), unit-return (function suffix vs returned unit),
+unit-raw-conversion (bare 1e9-family literal against a united value).
+"""
+from repro.core.units import ns_to_s
+
+
+def total_latency_ns(native_ns, coherency_s):
+    # BUG unit-mismatch: adding seconds to nanoseconds
+    combined = native_ns + coherency_s
+    return combined
+
+
+def report_seconds(latency_ns):
+    # BUG unit-raw-conversion: the ns->s scale change bypasses core.units
+    return latency_ns * 1e-9
+
+
+def window_ns(span_s):
+    # BUG unit-return: function is *_ns by suffix but returns seconds
+    return span_s
+
+
+def fold(delay_ns, budget_s):
+    # BUG unit-mismatch: comparing nanoseconds against seconds
+    if delay_ns > budget_s:
+        return ns_to_s(delay_ns)
+    # BUG unit-mismatch: ns_to_s expects nanoseconds, got seconds
+    return ns_to_s(budget_s)
+
+
+def stamp(total_ns, wall_s):
+    # BUG unit-mismatch: a *_s name assigned a nanosecond value
+    elapsed_s = total_ns
+    return elapsed_s

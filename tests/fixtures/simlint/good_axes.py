@@ -1,0 +1,51 @@
+"""Clean counterpart of bad_axes.py: 0 findings.
+
+Contracts declared on every required surface; consistent renaming at call
+sites (a sweep's G binds the callee's K everywhere); propagation through
+transpose-and-back, reductions, indexing and a vmap closure all check out.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.annotations import axes
+
+
+@axes("K,B,N", stts="K,S")
+def _analyze_multi_jax(xs, stts):
+    return xs.sum(axis=-1) + stts.sum(axis=-1)[:, None]
+
+
+@axes("K,B,N", stts="K,S")
+def cascade(xs, stts):
+    return xs.sum(axis=-1) + stts.sum(axis=-1)[:, None]
+
+
+@axes("G,B,N", stts="G,S")
+def dispatch_renamed(t, stts):
+    # G consistently binds the callee's K: legal renaming
+    return cascade(t, stts)
+
+
+@axes("K,B,N", stts="K,S")
+def dispatch_roundtrip(t, stts):
+    # transpose there and back: the tracked spec returns to [K,B,N]
+    tt = jnp.transpose(t, (1, 0, 2))
+    back = jnp.transpose(tt, (1, 0, 2))
+    return cascade(back, stts)
+
+
+@axes("K,B,N", stts="K,S")
+def dispatch_vmapped(t, stts):
+    # the closure sees [B,N] rows; its reductions stay in range
+    def one(row):
+        return row.sum(axis=1)
+
+    per_session = jax.vmap(one)(t)
+    return per_session + stts.sum(axis=-1)[:, None]
+
+
+@axes("B,N")
+def reduce_in_range(x):
+    total = x.sum(axis=1)
+    kept = x.max(axis=0, keepdims=True)
+    return total, kept[0]

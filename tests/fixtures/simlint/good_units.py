@@ -1,0 +1,37 @@
+"""Clean counterpart of bad_units.py: 0 findings.
+
+Same shapes, with every conversion routed through repro.core.units, the
+bandwidth identity exercised (bytes / gbps is already ns — GB/s ==
+bytes/ns), and an explicit annotations.unit(...) marker.
+"""
+from repro.analysis.annotations import unit
+from repro.core.units import NS_PER_S, ns_to_s, s_to_ns
+
+
+def total_latency_ns(native_ns, coherency_s):
+    return native_ns + s_to_ns(coherency_s)
+
+
+def report_seconds(latency_ns):
+    return ns_to_s(latency_ns)
+
+
+def window_ns(span_s):
+    return span_s * NS_PER_S
+
+
+def queue_delay_ns(wbytes, bw_gbps):
+    # GB/s == bytes/ns: byte / (byte/ns) = ns, no conversion needed
+    return wbytes / bw_gbps
+
+
+def fold(delay_ns, budget_s):
+    if delay_ns > s_to_ns(budget_s):
+        return ns_to_s(delay_ns)
+    return budget_s
+
+
+def stamp(total_ns, wall_s):
+    elapsed_s = ns_to_s(total_ns)
+    drift = unit("s", wall_s - elapsed_s)
+    return drift

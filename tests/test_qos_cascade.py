@@ -28,6 +28,7 @@ from repro.core.topology import (
     figure1_topology,
     pooled_topology,
 )
+from repro.core.units import ns_to_s
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.kernels.congestion import qos_congestion_cascade as qos_cascade_pallas
@@ -528,7 +529,7 @@ def test_fabric_wfq_weights_shift_tenant_shares():
     a, b = reports["protect0"], reports["protect1"]
     assert a.summary()["qos_classes"] == 2
     for rep in (a, b):
-        assert float(np.sum(rep.per_class_congestion_ns)) * 1e-9 == pytest.approx(
+        assert ns_to_s(float(np.sum(rep.per_class_congestion_ns))) == pytest.approx(
             rep.congestion_s, rel=1e-9, abs=1e-15
         )
     # deprioritizing class 0 raises its share of the queueing delay
